@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: world construction + CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """The harness's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def build_world(n_vehicles: int, n_per_class: int, iid: bool, alpha: float,
+                seed: int = 0, min_per_client: int = 0):
+    from repro.configs.base import get_config
+    from repro.data.synthetic import (make_dataset, partition_dirichlet,
+                                      partition_iid)
+    from repro.models.resnet import init_resnet
+    x, y = make_dataset(n_per_class=n_per_class, seed=seed)
+    if iid:
+        parts = partition_iid(y, n_vehicles, seed=seed)
+    else:
+        parts = partition_dirichlet(y, n_vehicles, alpha=alpha,
+                                    min_per_client=min_per_client, seed=seed)
+    tree = init_resnet(get_config("resnet18-cifar"),
+                       jax.random.PRNGKey(seed))
+    return x, y, parts, tree
+
+
+def probe_accuracy(tree, x, y, n_train=600, n_test=300):
+    from repro.eval.probe import encode, knn_top1
+    n_train = min(n_train, int(0.8 * len(x)))
+    n_test = min(n_test, len(x) - n_train)
+    f_tr = encode(tree, x[:n_train])
+    f_te = encode(tree, x[n_train:n_train + n_test])
+    return knn_top1(f_tr, y[:n_train], f_te, y[n_train:n_train + n_test])

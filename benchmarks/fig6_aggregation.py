@@ -1,0 +1,66 @@
+"""Paper Fig. 6: aggregation-scheme comparison under motion blur.
+
+Claim under test: blur-weighted aggregation (FLSimCo) yields a more
+stable loss curve than baseline1 (plain FedAvg over blurred models) and
+baseline2 (discard models from vehicles over 100 km/h), measured by the
+std of the loss-curve gradient (paper: 0.067 vs 0.23 / 0.10 — reductions
+of 70.9% and 33%).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import build_world, emit, save_json
+from repro.core.federation import FLConfig, FederatedTrainer, gradient_std
+
+
+def run(aggregator: str, rounds: int, vehicles: int, per_round: int,
+        batch: int, n_per_class: int, seed: int):
+    x, y, parts, tree = build_world(vehicles, n_per_class, iid=False,
+                                    alpha=0.1, min_per_client=40, seed=seed)
+    cfg = FLConfig(n_vehicles=vehicles, vehicles_per_round=per_round,
+                   batch_size=batch, rounds=rounds, aggregator=aggregator,
+                   lr=0.5, seed=seed)
+    tr = FederatedTrainer(cfg, tree, [x[p] for p in parts])
+    hist = tr.run(log_every=0)
+    return [h["loss"] for h in hist]
+
+
+def main(args=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--vehicles", type=int, default=10)
+    ap.add_argument("--per-round", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--n-per-class", type=int, default=80)
+    ap.add_argument("--repeats", type=int, default=1)
+    a = ap.parse_args(args)
+
+    out = {}
+    for agg, label in (("flsimco", "flsimco"), ("fedavg", "baseline1"),
+                       ("discard", "baseline2")):
+        stds, curves = [], []
+        t0 = time.time()
+        for rep in range(a.repeats):
+            losses = run(agg, a.rounds, a.vehicles, a.per_round, a.batch,
+                         a.n_per_class, seed=rep)
+            stds.append(gradient_std(losses))
+            curves.append(losses)
+        dt = time.time() - t0
+        out[label] = {"grad_std": float(np.mean(stds)), "losses": curves[0]}
+        emit(f"fig6/{label}", dt * 1e6 / max(a.rounds * a.repeats, 1),
+             f"grad_std={np.mean(stds):.4f}")
+    if out["baseline1"]["grad_std"] > 0:
+        red1 = 1 - out["flsimco"]["grad_std"] / out["baseline1"]["grad_std"]
+        red2 = 1 - out["flsimco"]["grad_std"] / max(out["baseline2"]["grad_std"], 1e-9)
+        emit("fig6/grad_std_reduction_vs_b1", 0.0, f"{red1:+.1%}")
+        emit("fig6/grad_std_reduction_vs_b2", 0.0, f"{red2:+.1%}")
+    save_json("fig6.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Roofline analysis from the dry-run artifacts (deliverable (g)).
+
+Reads benchmarks/results/dryrun.json (produced by repro.launch.dryrun) and
+derives, per (arch x shape x mesh):
+
+    compute_term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory_term     = HLO_bytes_per_device / HBM_bw
+    collective_term = collective_bytes_per_device / link_bw
+
+dominant bottleneck = argmax of the three. Also reports MODEL_FLOPS =
+6*N*D (6*N_active*D for MoE) and its ratio to compiled FLOPs (remat /
+redundancy waste detector).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI
+per link (3 links/chip usable -> we charge the busiest-link model:
+collective bytes / link_bw).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit, save_json
+from repro.configs.base import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.n_active_params() if cfg.is_moe else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(rec: dict, key: str) -> dict:
+    arch, shape, mesh_name = rec["arch"], rec["shape"], rec["mesh"]
+    chips = 512 if mesh_name == "2x16x16" else 256
+    cal = rec.get("calibrated")
+    if cal:  # depth-extrapolated (scan bodies counted per layer)
+        flops_dev, bytes_dev, coll_dev = cal["flops"], cal["bytes"], cal["coll"]
+    else:
+        flops_dev = rec["cost"].get("flops", 0.0)
+        bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+        coll_dev = sum(v for k, v in rec["collectives"].items()
+                       if not k.startswith("count_"))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape)
+    mf_dev = mf / chips
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    bound = max(terms.values())
+    mfu_bound = (mf_dev / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_dev,
+        "useful_flops_ratio": useful,
+        "roofline_mfu_bound": mfu_bound,
+        "peak_bytes": rec.get("memory", {}).get("peak_bytes"),
+        "n_micro": rec.get("n_micro"),
+        "calibrated": bool(cal),
+    }
+
+
+def main(args=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default=os.path.join(RESULTS_DIR, "dryrun.json"))
+    ap.add_argument("--markdown", action="store_true")
+    a = ap.parse_args(args)
+    if not os.path.exists(a.dryrun):
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return {}
+    with open(a.dryrun) as f:
+        recs = json.load(f)
+    rows = []
+    for key, rec in sorted(recs.items()):
+        if not rec.get("ok"):
+            continue
+        r = analyze(rec, key)
+        rows.append(r)
+        emit(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dom={r['dominant']};useful={r['useful_flops_ratio']:.2f};"
+             f"mfu_bound={r['roofline_mfu_bound']:.3f}")
+    save_json("roofline.json", rows)
+    if a.markdown:
+        print(markdown_table(rows))
+    return rows
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+           " | dominant | useful | MFU bound |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+
+  fig4  — FLSimCo vs FedCo top-1 (IID / Non-IID)         [paper Fig. 4]
+  fig5  — vehicles-per-round & local iterations          [paper Fig. 5]
+  fig6  — aggregation schemes, loss-gradient std         [paper Fig. 6]
+  kernels — Pallas kernel microbench + fusion model
+  roofline — per (arch x shape x mesh) roofline terms from the dry-run
+
+Env knobs: BENCH_SCALE=ci|paper (default ci — minutes, not hours).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    scale = os.environ.get("BENCH_SCALE", "ci")
+    failures = []
+
+    def run(name, fn):
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, e))
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc()
+
+    from benchmarks import (beyond_weighting, fig4_flsimco_vs_fedco,
+                            fig5_cohort_size, fig6_aggregation, kernel_bench,
+                            roofline)
+
+    if scale == "paper":
+        run("fig4", lambda: fig4_flsimco_vs_fedco.main(
+            ["--rounds", "150", "--vehicles", "95", "--per-round", "5",
+             "--batch", "512", "--n-per-class", "5000"]))
+        run("fig5", lambda: fig5_cohort_size.main(
+            ["--rounds", "150", "--vehicles", "95", "--batch", "512",
+             "--n-per-class", "5000"]))
+        run("fig6", lambda: fig6_aggregation.main(
+            ["--rounds", "150", "--vehicles", "95", "--per-round", "5",
+             "--batch", "512", "--n-per-class", "5000", "--repeats", "3"]))
+    else:
+        run("fig4", lambda: fig4_flsimco_vs_fedco.main(
+            ["--rounds", "4", "--vehicles", "8", "--per-round", "3",
+             "--batch", "48", "--n-per-class", "60"]))
+        run("fig5", lambda: fig5_cohort_size.main(
+            ["--rounds", "3", "--vehicles", "9", "--batch", "48",
+             "--n-per-class", "60"]))
+        run("fig6", lambda: fig6_aggregation.main(
+            ["--rounds", "4", "--vehicles", "8", "--per-round", "3",
+             "--batch", "48", "--n-per-class", "60"]))
+    if scale == "paper":
+        run("beyond_weighting", lambda: beyond_weighting.main(
+            ["--rounds", "150", "--vehicles", "95", "--per-round", "5",
+             "--batch", "512", "--n-per-class", "5000"]))
+    else:
+        run("beyond_weighting", lambda: beyond_weighting.main(
+            ["--rounds", "3", "--vehicles", "6", "--per-round", "3",
+             "--batch", "32", "--n-per-class", "50"]))
+    run("kernels", lambda: kernel_bench.main(["--quick"] if scale == "ci"
+                                             else []))
+    run("roofline", lambda: roofline.main([]))
+
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: "
+                         f"{[n for n, _ in failures]}")
+
+
+if __name__ == '__main__':
+    main()

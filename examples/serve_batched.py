@@ -1,0 +1,87 @@
+"""Batched serving demo: prefill + autoregressive decode with a KV cache.
+
+Loads any assigned architecture (reduced variant by default so it runs on
+CPU), prefill a batch of prompts, then decodes N tokens per sequence with
+greedy sampling — the serve path the decode_32k / long_500k dry-run shapes
+lower at production scale.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch tinyllama-1.1b \
+      --reduced --tokens 16
+  PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-1.6b \
+      --reduced --long-context     # O(1)-state long-context decode
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--long-context", action="store_true")
+    a = ap.parse_args()
+
+    cfg = get_config(a.arch)
+    if a.reduced:
+        cfg = cfg.reduced()
+    print(f"== serving {cfg.name} ({cfg.family}) ==")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+
+    B, S = a.batch, a.prompt_len
+    max_pos = S + a.tokens
+    prompts = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    ctx_len = 8 if cfg.family == "audio" else 0
+    aux = None
+    if cfg.family == "vlm":
+        aux = {"patches": jax.random.normal(
+            key, (B, cfg.n_vision_tokens, cfg.d_vision))}
+    if cfg.family == "audio":
+        aux = {"frames": jax.random.normal(key, (B, ctx_len, cfg.d_audio))}
+
+    cache = T.init_cache(cfg, B, max_pos, dtype=jnp.float32,
+                         long_context=a.long_context, ctx_len=ctx_len)
+    t0 = time.time()
+    prefill = jax.jit(lambda p, t, c: T.forward(
+        cfg, p, t, mode="prefill", cache=c, aux_inputs=aux,
+        long_context=a.long_context))
+    logits, cache, _ = prefill(params, prompts, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: {B}x{S} tokens in {t_prefill*1e3:.1f} ms "
+          f"({B*S/t_prefill:.0f} tok/s)")
+
+    decode = jax.jit(lambda p, t, c, pos: T.forward(
+        cfg, p, t, mode="decode", cache=c, positions=pos,
+        long_context=a.long_context))
+    tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for i in range(a.tokens - 1):
+        pos = jnp.full((B,), S + i, jnp.int32)
+        logits, cache, _ = decode(params, tok, cache, pos)
+        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decode: {a.tokens} steps x {B} seqs in {t_dec*1e3:.1f} ms "
+          f"({(a.tokens-1)*B/max(t_dec,1e-9):.0f} tok/s)")
+    print("generated ids (seq 0):", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+"""Config system: architecture + input-shape registry.
+
+Every assigned architecture is a frozen dataclass instance built by its
+``src/repro/configs/<id>.py`` module (one per arch, citing its source).
+``reduced()`` derives the CPU smoke-test variant (<=2 layers, d_model<=512,
+<=4 experts) from the same family definition so smoke tests exercise the
+identical code path as the full config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+VOCAB_PAD_MULTIPLE = 2048  # clean model-axis sharding (16 * 128)
+
+
+def pad_vocab(v: int, multiple: int = VOCAB_PAD_MULTIPLE) -> int:
+    return int(math.ceil(v / multiple) * multiple)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters. Family selects the block assembly."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | resnet
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    citation: str = ""
+
+    # --- attention variants -------------------------------------------------
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False                      # qwen2
+    sliding_window: int = 0                     # 0 = full attention
+    local_global_period: int = 0                # gemma2: 2 -> alternate local/global
+    attn_logit_softcap: float = 0.0             # gemma2: 50.
+    final_logit_softcap: float = 0.0            # gemma2: 30.
+    attn_scale_override: float = 0.0            # 0 -> 1/sqrt(head_dim)
+
+    # --- FFN ----------------------------------------------------------------
+    act: str = "silu"                           # silu | gelu
+    gated_mlp: bool = True                      # SwiGLU/GeGLU when True
+
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    n_experts_active: int = 0
+    moe_capacity_factor: float = 1.25
+    router_aux_loss_coef: float = 0.01
+    # scatter: sort+scatter dispatch with global token ids (baseline)
+    # ep:      shard_map expert-parallel all_to_all (§Perf iteration 2)
+    # auto:    ep when a model-parallel mesh is ambient, else scatter
+    moe_impl: str = "auto"
+    n_shared_experts: int = 0                   # kimi-k2: 1 shared expert
+    moe_first_dense_layers: int = 0             # kimi-k2: first layer dense
+
+    # --- SSM / RWKV ----------------------------------------------------------
+    ssm_state: int = 0                          # mamba state size (hymba 16)
+    ssm_expand: int = 2
+    rwkv_head_dim: int = 64
+
+    # --- hybrid (hymba: parallel attn + ssm heads) ---------------------------
+    hybrid_parallel: bool = False
+
+    # --- VLM ----------------------------------------------------------------
+    cross_attn_period: int = 0                  # llama3.2-vision: every 5th layer
+    n_vision_tokens: int = 0
+    d_vision: int = 0
+
+    # --- audio / enc-dec -----------------------------------------------------
+    n_encoder_layers: int = 0                   # seamless: 24
+    d_audio: int = 0                            # frontend frame-embedding dim
+
+    # --- norm / embedding ----------------------------------------------------
+    norm: str = "rmsnorm"                       # rmsnorm | layernorm
+    post_norm: bool = False                     # gemma2: post-block norms too
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    embed_scale: bool = False                   # gemma-style sqrt(d) scaling
+
+    # --- long-context --------------------------------------------------------
+    # native      : O(1)-state recurrence handles 500k (ssm / hybrid)
+    # sliding_window: dense archs run long_500k with a ring-buffer KV cache
+    long_context_mode: str = "sliding_window"
+    long_context_window: int = 8192
+
+    # --- derived -------------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def n_params(self) -> int:
+        """Approximate total parameter count (embeddings + blocks)."""
+        d, h = self.d_model, self.head_dim_
+        attn = d * (self.n_heads * h) + 2 * d * (self.n_kv_heads * h) + (self.n_heads * h) * d
+        mlp_mult = 3 if self.gated_mlp else 2
+        if self.is_moe:
+            ff = mlp_mult * d * self.d_ff * (self.n_experts + self.n_shared_experts)
+            ff += d * self.n_experts  # router
+        else:
+            ff = mlp_mult * d * self.d_ff
+        per_layer = attn + ff
+        if self.family == "ssm":  # rwkv6: no attn, tkn-shift mixing + wkv params
+            per_layer = 6 * d * d + mlp_mult * d * self.d_ff
+        if self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            per_layer = attn + mlp_mult * d * self.d_ff + 2 * d * d_in + d_in * d
+        n = self.n_layers * per_layer
+        if self.cross_attn_period:
+            n_cross = self.n_layers // self.cross_attn_period
+            n += n_cross * (2 * d * d + 2 * d * (self.n_kv_heads * h))
+        if self.is_encdec:
+            n += self.n_encoder_layers * per_layer
+        n += self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        return int(n)
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: active experts only)."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        mlp_mult = 3 if self.gated_mlp else 2
+        dense_ff = mlp_mult * d * self.d_ff * (self.n_experts_active + self.n_shared_experts)
+        h = self.head_dim_
+        attn = d * (self.n_heads * h) + 2 * d * (self.n_kv_heads * h) + (self.n_heads * h) * d
+        per_layer = attn + dense_ff + d * self.n_experts
+        return int(self.n_layers * per_layer + self.padded_vocab * d * 2)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family/code path, tiny dims."""
+        kw = dict(
+            name=self.name + "-smoke",
+            n_layers=2,
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=64,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 1024),
+        )
+        if self.n_experts:
+            kw.update(n_experts=4, n_experts_active=2,
+                      n_shared_experts=min(self.n_shared_experts, 1),
+                      moe_first_dense_layers=min(self.moe_first_dense_layers, 1))
+        if self.n_encoder_layers:
+            kw.update(n_encoder_layers=2)
+        if self.cross_attn_period:
+            kw.update(cross_attn_period=2, n_vision_tokens=16, d_vision=64)
+        if self.sliding_window:
+            kw.update(sliding_window=32)
+        if self.long_context_window:
+            kw.update(long_context_window=64)
+        if self.d_audio:
+            kw.update(d_audio=64)
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One assigned (seq_len, global_batch) workload."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    # import for registration side-effect
+    from repro.configs import (  # noqa: F401
+        tinyllama_1_1b, seamless_m4t_large_v2, rwkv6_1_6b, hymba_1_5b,
+        gemma2_27b, kimi_k2_1t_a32b, llama_3_2_vision_90b, olmoe_1b_7b,
+        qwen2_0_5b, deepseek_67b, resnet18_cifar,
+    )

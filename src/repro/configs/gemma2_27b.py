@@ -1,0 +1,26 @@
+"""Gemma2-27B — local/global alternating attention, logit softcaps [arXiv:2408.00118]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    citation="arXiv:2408.00118",
+    local_global_period=2,      # even layers: sliding window; odd: global
+    sliding_window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    act="gelu",
+    gated_mlp=True,             # GeGLU
+    norm="rmsnorm",
+    post_norm=True,
+    embed_scale=True,
+    tie_embeddings=True,
+    attn_scale_override=1.0 / (224 ** 0.5),  # query_pre_attn_scalar=224 for 27B
+))

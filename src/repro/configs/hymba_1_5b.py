@@ -1,0 +1,26 @@
+"""Hymba-1.5B — parallel attention + mamba heads per layer [arXiv:2411.13676].
+
+25 attention heads (GQA kv=5) in parallel with a selective-SSM branch
+(state 16) inside every layer; outputs of the two branches are mean-fused
+after per-branch normalization, per the Hymba paper. Attention uses a
+sliding window in all but a few global layers; we model the window for
+long-context serving (the SSM branch carries unbounded context).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    citation="arXiv:2411.13676",
+    ssm_state=16,
+    ssm_expand=2,
+    hybrid_parallel=True,
+    sliding_window=1024,
+    long_context_mode="native",  # SSM branch is O(1)-state
+))

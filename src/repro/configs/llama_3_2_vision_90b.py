@@ -1,0 +1,27 @@
+"""Llama-3.2-Vision-90B — cross-attn image layers [hf:meta-llama/Llama-3.2-11B-Vision].
+
+Language backbone only: 100 layers (80 self-attention + 20 gated
+cross-attention, one every 5th layer), d_model=8192, 64 heads (GQA kv=8),
+d_ff=28672, vocab 128256. The ViT vision encoder + projector is a STUB per
+the assignment: input_specs() supplies precomputed patch embeddings
+(B, n_vision_tokens, d_vision) which a linear projector maps into d_model
+for the cross-attention keys/values.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    citation="hf:meta-llama/Llama-3.2-11B-Vision",
+    cross_attn_period=5,
+    n_vision_tokens=1601,      # 1 global + 1600 patches @ 560px
+    d_vision=1280,
+    act="silu",
+    gated_mlp=True,
+))

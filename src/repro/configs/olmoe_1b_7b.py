@@ -1,0 +1,18 @@
+"""OLMoE-1B-7B — 64 experts top-8 MoE [arXiv:2409.02060]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    citation="arXiv:2409.02060",
+    n_experts=64,
+    n_experts_active=8,
+    act="silu",
+    gated_mlp=True,
+))

@@ -1,0 +1,19 @@
+"""Qwen2-0.5B — GQA with QKV bias [arXiv:2407.10671]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    citation="arXiv:2407.10671",
+    qkv_bias=True,
+    tie_embeddings=True,
+    act="silu",
+    gated_mlp=True,
+    rope_theta=1_000_000.0,
+))

@@ -1,0 +1,27 @@
+"""SeamlessM4T-large-v2 — enc-dec, multimodal [arXiv:2308.11596].
+
+Backbone only: 24 encoder + 24 decoder layers, d_model=1024, 16 heads
+(GQA kv=16 => MHA), d_ff=8192, vocab 256206 (padded for sharding). The
+speech frontend (mel-spectrogram + conformer conv feature extractor) is a
+STUB per the assignment: input_specs() supplies precomputed frame
+embeddings of shape (B, T_frames, d_audio) which the encoder consumes
+through a linear adapter.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,               # decoder layers
+    n_encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    citation="arXiv:2308.11596",
+    act="gelu",
+    gated_mlp=False,
+    norm="layernorm",
+    d_audio=1024,
+))

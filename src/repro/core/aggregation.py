@@ -1,0 +1,159 @@
+"""Model aggregation schemes — the paper's core contribution (Eq. 11).
+
+Two implementations of each scheme:
+
+* **host-level** (`aggregate`): takes a list of client parameter pytrees —
+  the faithful cross-device FL simulation used by the paper-repro examples
+  and benchmarks.
+* **mesh-level** (`weighted_psum_tree`): each client cohort lives on a
+  slice of the (pod, data) mesh axes and aggregation is a single weighted
+  all-reduce — the TPU-native production form used by launch/steps.py.
+  Equivalence of the two is covered by tests/test_aggregation.py.
+
+Schemes:
+  flsimco  — blur-weighted (Eq. 11), weight_n ∝ (ΣL − L_n)/ΣL
+  fedavg   — baseline1: uniform average (McMahan et al.)
+  discard  — baseline2: drop clients above the blur threshold, then fedavg
+  (FedCo reuses fedavg for parameters; its queue logic lives in core/ssl.py)
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _weighted_tree_sum(trees: Sequence, weights) -> object:
+    """sum_n w_n * tree_n (weights: (N,) array)."""
+    weights = jnp.asarray(weights, jnp.float32)
+
+    def comb(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        out = jnp.tensordot(weights, stacked, axes=1)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(comb, *trees)
+
+
+def flsimco_weights(blur_levels, normalize: bool = True):
+    """Eq. (11) weights: w_n = (ΣL − L_n) / ΣL   [/ (N−1) when normalized].
+
+    The literal equation's weights sum to N−1; `normalize=True` (default)
+    rescales them to sum to 1, the only reading under which the paper's
+    multi-vehicle experiments converge (DESIGN.md deviation #2).
+    """
+    L = jnp.asarray(blur_levels, jnp.float32)
+    N = L.shape[0]
+    total = jnp.sum(L)
+    w = (total - L) / jnp.maximum(total, 1e-12)
+    if normalize:
+        s = jnp.sum(w)
+        # degenerate cases (single client, or all-zero blur) -> uniform
+        w = jnp.where(s > 1e-12, w / jnp.maximum(s, 1e-12),
+                      jnp.full_like(w, 1.0 / N))
+    return w
+
+
+def aggregate_flsimco(trees: Sequence, blur_levels, normalize: bool = True):
+    """Blur-level-weighted aggregation (FLSimCo, Eq. 11)."""
+    return _weighted_tree_sum(trees, flsimco_weights(blur_levels, normalize))
+
+
+def aggregate_fedavg(trees: Sequence, data_sizes=None):
+    """Baseline1: FedAvg; optionally weighted by local dataset size."""
+    n = len(trees)
+    if data_sizes is None:
+        w = jnp.full((n,), 1.0 / n)
+    else:
+        s = jnp.asarray(data_sizes, jnp.float32)
+        w = s / jnp.sum(s)
+    return _weighted_tree_sum(trees, w)
+
+
+def aggregate_discard(trees: Sequence, velocities, threshold: float):
+    """Baseline2: drop clients with v > threshold, FedAvg the rest.
+
+    If every client exceeds the threshold, falls back to plain FedAvg
+    (the RSU cannot emit an empty model).
+    """
+    v = jnp.asarray(velocities, jnp.float32)
+    keep = (v <= threshold).astype(jnp.float32)
+    n_keep = jnp.sum(keep)
+    w = jnp.where(n_keep > 0, keep / jnp.maximum(n_keep, 1.0),
+                  jnp.full_like(keep, 1.0 / keep.shape[0]))
+    return _weighted_tree_sum(trees, w)
+
+
+# --------------------------------------------------------------------------
+# beyond-paper weighting variants (EXPERIMENTS.md §Paper-claims ablation)
+# --------------------------------------------------------------------------
+
+def softmax_weights(blur_levels, temperature: float = 5.0):
+    """w ∝ softmax(−L/T): exponential rather than linear blur penalty.
+
+    The paper's Eq. 11 is linear in L, so with many vehicles the weight
+    spread collapses (w_n → 1/N as N grows at fixed L spread). A softmax
+    keeps relative penalties scale-free in N — our proposed variant.
+    """
+    L = jnp.asarray(blur_levels, jnp.float32)
+    return jax.nn.softmax(-L / temperature)
+
+
+def aggregate_softmax(trees: Sequence, blur_levels, temperature: float = 5.0):
+    return _weighted_tree_sum(trees, softmax_weights(blur_levels, temperature))
+
+
+def inverse_weights(blur_levels, eps: float = 1.0):
+    """w ∝ 1/(L+eps): treats blur as noise std — inverse-variance-flavored."""
+    L = jnp.asarray(blur_levels, jnp.float32)
+    w = 1.0 / (L + eps)
+    return w / jnp.sum(w)
+
+
+def aggregate_inverse(trees: Sequence, blur_levels, eps: float = 1.0):
+    return _weighted_tree_sum(trees, inverse_weights(blur_levels, eps))
+
+
+AGGREGATORS = {
+    "flsimco": aggregate_flsimco,
+    "fedavg": aggregate_fedavg,
+    "discard": aggregate_discard,
+    "softmax": aggregate_softmax,
+    "inverse": aggregate_inverse,
+}
+
+
+# --------------------------------------------------------------------------
+# mesh-level (collective) form
+# --------------------------------------------------------------------------
+
+def weighted_psum_tree(tree, weight, axis_names):
+    """Per-cohort weighted all-reduce: params' <- Σ_cohorts w * params.
+
+    Inside shard_map/pjit, `weight` is this cohort's *normalized* scalar
+    weight (weights already sum to 1 across the axis). One psum over the
+    federated axes replaces the RSU gather-scatter — Eq. 11 as a collective.
+    """
+    def red(x):
+        y = x.astype(jnp.float32) * weight
+        y = jax.lax.psum(y, axis_names)
+        return y.astype(x.dtype)
+
+    return jax.tree.map(red, tree)
+
+
+def normalized_weight_on_axis(blur_level, axis_names, normalize: bool = True):
+    """This cohort's Eq.-11 weight, computed collectively over the mesh axes.
+
+    blur_level: scalar L for the local cohort. Uses two cheap psums
+    (scalar) to form (ΣL − L)/ΣL / Σ_n weights without gathering models.
+    """
+    L = jnp.asarray(blur_level, jnp.float32)
+    total = jax.lax.psum(L, axis_names)
+    w = (total - L) / jnp.maximum(total, 1e-12)
+    if normalize:
+        wsum = jax.lax.psum(w, axis_names)
+        n = jax.lax.psum(jnp.ones(()), axis_names)
+        w = jnp.where(wsum > 1e-12, w / jnp.maximum(wsum, 1e-12), 1.0 / n)
+    return w

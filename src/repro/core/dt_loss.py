@@ -1,0 +1,73 @@
+"""Dual-Temperature (DT) contrastive loss — FLSimCo Eq. (6)-(8).
+
+SimCo (Zhang et al., arXiv:2203.17248) removes MoCo's queue + momentum
+encoder by splitting the temperature's two roles:
+
+  * tau_alpha shapes the *intra-anchor* distribution (the softmax actually
+    trained through),
+  * tau_beta shapes the *inter-anchor* hardness weight.
+
+Per anchor i:   L_i = -sg[ W_beta_i / W_alpha_i ] * log p_alpha_i(pos)
+with            W_tau_i = 1 - softmax_tau(logits_i)[pos].
+
+The stop-gradient ratio reproduces the hardness-awareness a large MoCo
+dictionary provides, without storing one — the paper's reason SimCo fits
+vehicle-grade hardware.
+
+`dt_loss_matrix` is the faithful in-batch form used by FLSimCo: anchors
+q_i = f(pi1(x_i)), positives k_i = f(pi2(x_i)), negatives k_j (j != i)
+(Eq. 3-5). A Pallas-fused version lives in repro.kernels.dt_loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TAU_ALPHA = 0.1
+DEFAULT_TAU_BETA = 1.0
+
+
+def _dt_from_logits(logits, pos_index, tau_alpha, tau_beta):
+    """logits: (B, 1+K) raw similarities (pos at column `pos_index`).
+
+    Returns per-anchor loss vector (B,).
+    """
+    la = logits / tau_alpha
+    lb = logits / tau_beta
+    log_pa = jax.nn.log_softmax(la, axis=-1)
+    pa = jnp.exp(log_pa)
+    pb = jax.nn.softmax(lb, axis=-1)
+    pos_a = jnp.take_along_axis(pa, pos_index[:, None], axis=-1)[:, 0]
+    pos_b = jnp.take_along_axis(pb, pos_index[:, None], axis=-1)[:, 0]
+    w_alpha = 1.0 - pos_a                                    # Eq. (8)
+    w_beta = 1.0 - pos_b                                     # Eq. (7)
+    weight = jax.lax.stop_gradient(w_beta / jnp.maximum(w_alpha, 1e-8))
+    log_pos_a = jnp.take_along_axis(log_pa, pos_index[:, None], axis=-1)[:, 0]
+    return -weight * log_pos_a                               # Eq. (6)
+
+
+def dt_loss(q, k_pos, k_neg, tau_alpha=DEFAULT_TAU_ALPHA,
+            tau_beta=DEFAULT_TAU_BETA):
+    """Explicit-negative form. q,k_pos: (B,D); k_neg: (K,D) shared negatives."""
+    pos = jnp.sum(q * k_pos, axis=-1, keepdims=True)         # (B,1)
+    neg = q @ k_neg.T                                        # (B,K)
+    logits = jnp.concatenate([pos, neg], axis=-1).astype(jnp.float32)
+    pos_index = jnp.zeros((q.shape[0],), jnp.int32)
+    return _dt_from_logits(logits, pos_index, tau_alpha, tau_beta).mean()
+
+
+def dt_loss_matrix(q, k, tau_alpha=DEFAULT_TAU_ALPHA, tau_beta=DEFAULT_TAU_BETA):
+    """In-batch form (FLSimCo Eq. 3-5): positives on the diagonal of q@k^T,
+    negatives are the other columns. q, k: (B, D), L2-normalized."""
+    B = q.shape[0]
+    sim = (q @ k.T).astype(jnp.float32)                      # (B,B)
+    pos_index = jnp.arange(B, dtype=jnp.int32)
+    return _dt_from_logits(sim, pos_index, tau_alpha, tau_beta).mean()
+
+
+def info_nce_loss(q, k_pos, queue, tau=0.07):
+    """MoCo-style InfoNCE against a negative queue — FedCo baseline."""
+    pos = jnp.sum(q * k_pos, axis=-1, keepdims=True)
+    neg = q @ queue.T
+    logits = jnp.concatenate([pos, neg], axis=-1).astype(jnp.float32) / tau
+    return -jax.nn.log_softmax(logits, axis=-1)[:, 0].mean()

@@ -1,0 +1,276 @@
+"""Federated orchestration — FLSimCo Sec. 4 Steps 1-4.
+
+One `FederatedTrainer` drives the full loop of the paper:
+
+  Step 1  RSU initializes the global model
+  Step 2  each participating vehicle downloads it, applies pi1/pi2 to its
+          local (velocity-blurred) images, and runs `local_iters` SGD steps
+          on the dual-temperature loss
+  Step 3  vehicles upload parameters + velocity
+  Step 4  the RSU aggregates with the selected scheme (flsimco / fedavg /
+          discard / fedco) and the next round begins
+
+Clients within a round are executed with ``jax.vmap`` over a stacked
+parameter tree — the same "cohorts in parallel" dataflow the production
+mesh uses (launch/steps.py), just with the batch axis instead of mesh
+axes. A sequential python path is kept for readability/debugging and is
+tested equivalent.
+
+Supports both the paper's ResNet backbone (images) and any token
+architecture from the zoo (token views), per DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import ssl
+from repro.core.dt_loss import dt_loss_matrix, info_nce_loss
+from repro.core.mobility import KMH_100, MobilityModel, apply_motion_blur
+from repro.models.resnet import resnet_apply
+from repro.optim.optimizers import cosine_schedule, sgd
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    n_vehicles: int = 95          # fleet size (Table 1)
+    vehicles_per_round: int = 5   # N_r (Fig. 5: 5 or 10)
+    local_iters: int = 1          # local SGD iterations per round
+    batch_size: int = 512         # Table 1 / Sec. 5.2
+    rounds: int = 150             # R^max
+    lr: float = 0.9               # Table 1 (cosine annealed)
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    tau_alpha: float = 0.1
+    tau_beta: float = 1.0
+    aggregator: str = "flsimco"   # flsimco | fedavg | discard | fedco
+    blur_threshold: float = KMH_100
+    moco_momentum: float = 0.99   # FedCo key-encoder EMA (Table 1)
+    queue_len: int = 4096         # FedCo global queue (Sec. 5.2)
+    feature_dim: int = 128
+    normalize_weights: bool = True
+    seed: int = 0
+
+
+# --------------------------------------------------------------------------
+# per-client local training (ResNet / images)
+# --------------------------------------------------------------------------
+
+def _client_loss(tree, cfg: FLConfig, images, key):
+    """pi1/pi2 views -> encoder -> DT loss. Returns (loss, new_tree)."""
+    k1, k2 = jax.random.split(key)
+    v1 = ssl.pi1(k1, images)
+    v2 = ssl.pi2(k2, images)
+    q, _, tree1 = resnet_apply(tree, v1, train=True)
+    k, _, tree2 = resnet_apply(tree1, v2, train=True)
+    loss = dt_loss_matrix(q, k, cfg.tau_alpha, cfg.tau_beta)
+    return loss, tree2
+
+
+def make_local_train_step(cfg: FLConfig):
+    opt_init, opt_update = sgd(cfg.momentum, cfg.weight_decay)
+
+    def local_train(tree, images, key, lr):
+        """cfg.local_iters SGD steps on one client. Returns (tree, loss).
+
+        The iteration loop is a *python* unroll, not lax.scan: XLA-CPU
+        pessimizes convolutions inside while-loops (~25x slower measured),
+        and local_iters is 1-2 in the paper.
+        """
+        opt_state = opt_init(tree["params"])
+        losses = []
+        for k in jax.random.split(key, cfg.local_iters):
+            tree_c = tree
+
+            def loss_fn(params):
+                t = {"params": params, "state": tree_c["state"]}
+                loss, t2 = _client_loss(t, cfg, images, k)
+                return loss, t2["state"]
+
+            (loss, new_state), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(tree_c["params"])
+            new_params, opt_state = opt_update(tree_c["params"], grads,
+                                               opt_state, lr)
+            tree = {"params": new_params, "state": new_state}
+            losses.append(loss)
+        return tree, jnp.stack(losses).mean()
+
+    return local_train
+
+
+def make_moco_local_train_step(cfg: FLConfig):
+    """FedCo client: InfoNCE against the (global) queue, EMA key encoder."""
+    opt_init, opt_update = sgd(cfg.momentum, cfg.weight_decay)
+
+    def local_train(tree, key_tree, queue, images, key, lr):
+        # python unroll (see make_local_train_step for the XLA-CPU rationale)
+        opt_state = opt_init(tree["params"])
+        losses, kvec = [], None
+        for k in jax.random.split(key, cfg.local_iters):
+            k1, k2 = jax.random.split(k)
+            v1 = ssl.pi1(k1, images)
+            v2 = ssl.pi2(k2, images)
+            tree_c, key_tree_c = tree, key_tree
+
+            def loss_fn(params):
+                t = {"params": params, "state": tree_c["state"]}
+                q, _, t2 = resnet_apply(t, v1, train=True)
+                kv, _, _ = resnet_apply(key_tree_c, v2, train=False)
+                kv = jax.lax.stop_gradient(kv)
+                return info_nce_loss(q, kv, queue), (t2["state"], kv)
+
+            (loss, (new_state, kvec)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(tree_c["params"])
+            new_params, opt_state = opt_update(tree_c["params"], grads,
+                                               opt_state, lr)
+            tree = {"params": new_params, "state": new_state}
+            key_tree = {
+                "params": ssl.momentum_update(key_tree_c["params"], new_params,
+                                              cfg.moco_momentum),
+                "state": new_state,
+            }
+            losses.append(loss)
+        return tree, key_tree, kvec, jnp.stack(losses).mean()
+
+    return local_train
+
+
+# --------------------------------------------------------------------------
+# trainer
+# --------------------------------------------------------------------------
+
+class FederatedTrainer:
+    """Simulates the RSU + vehicle fleet of FLSimCo on host."""
+
+    def __init__(self, cfg: FLConfig, global_tree, client_data: list,
+                 mobility: Optional[MobilityModel] = None,
+                 blur_images: bool = True):
+        self.cfg = cfg
+        self.global_tree = global_tree
+        self.client_data = client_data          # list of (images ndarray)
+        self.mobility = mobility or MobilityModel()
+        self.blur_images = blur_images
+        self.lr_fn = cosine_schedule(cfg.lr, cfg.rounds)
+        self.rng = np.random.RandomState(cfg.seed)
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self._local = jax.jit(make_local_train_step(cfg))
+        self._vlocal = jax.jit(jax.vmap(make_local_train_step(cfg),
+                                        in_axes=(0, 0, 0, None)))
+        self.history: list[dict] = []
+        # FedCo state
+        if cfg.aggregator == "fedco":
+            self.key_tree = jax.tree.map(jnp.copy, global_tree)
+            self.global_queue = jax.random.normal(
+                jax.random.PRNGKey(cfg.seed + 1), (cfg.queue_len, cfg.feature_dim))
+            self.global_queue /= jnp.linalg.norm(self.global_queue, axis=-1,
+                                                 keepdims=True)
+            self._moco_local = jax.jit(make_moco_local_train_step(cfg))
+
+    # -- sampling ----------------------------------------------------------
+
+    def _sample_round(self):
+        n = self.cfg.vehicles_per_round
+        ids = self.rng.choice(self.cfg.n_vehicles, size=n, replace=False)
+        self.key, k = jax.random.split(self.key)
+        velocities = self.mobility.sample(k, n)
+        return ids, velocities
+
+    def _client_batch(self, cid: int, velocity):
+        data = self.client_data[cid]
+        # fixed batch size across clients (vmapped cohorts need equal
+        # shapes); small clients sample with replacement
+        idx = self.rng.choice(len(data), size=self.cfg.batch_size,
+                              replace=len(data) < self.cfg.batch_size)
+        images = jnp.asarray(data[idx])
+        if self.blur_images:
+            images = apply_motion_blur(images, velocity,
+                                       self.mobility.camera_const)
+        return images
+
+    # -- one round (Steps 2-4) ----------------------------------------------
+
+    def round(self, r: int, parallel: bool = True) -> dict:
+        cfg = self.cfg
+        ids, velocities = self._sample_round()
+        blur = self.mobility.blur_level(velocities)
+        lr = self.lr_fn(r)
+        self.key, *cks = jax.random.split(self.key, len(ids) + 1)
+
+        if cfg.aggregator == "fedco":
+            return self._round_fedco(r, ids, velocities, cks, lr)
+
+        batches = jnp.stack([self._client_batch(c, v)
+                             for c, v in zip(ids, velocities)])
+        if parallel:
+            stacked = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape),
+                self.global_tree)
+            trees, losses = self._vlocal(stacked, batches, jnp.stack(cks), lr)
+            client_trees = [jax.tree.map(lambda x: x[i], trees)
+                            for i in range(len(ids))]
+            losses = list(np.asarray(losses))
+        else:
+            client_trees, losses = [], []
+            for i, cid in enumerate(ids):
+                t, l = self._local(self.global_tree, batches[i], cks[i], lr)
+                client_trees.append(t)
+                losses.append(float(l))
+
+        if cfg.aggregator == "flsimco":
+            new_tree = agg.aggregate_flsimco(client_trees, blur,
+                                             cfg.normalize_weights)
+        elif cfg.aggregator == "discard":
+            new_tree = agg.aggregate_discard(client_trees, velocities,
+                                             cfg.blur_threshold)
+        elif cfg.aggregator == "softmax":          # beyond-paper variant
+            new_tree = agg.aggregate_softmax(client_trees, blur)
+        elif cfg.aggregator == "inverse":          # beyond-paper variant
+            new_tree = agg.aggregate_inverse(client_trees, blur)
+        else:
+            new_tree = agg.aggregate_fedavg(client_trees)
+        self.global_tree = new_tree
+        rec = {"round": r, "loss": float(np.mean(losses)),
+               "velocities": np.asarray(velocities).tolist(),
+               "lr": float(lr)}
+        self.history.append(rec)
+        return rec
+
+    def _round_fedco(self, r, ids, velocities, cks, lr) -> dict:
+        trees, losses, kvec_list = [], [], []
+        for i, cid in enumerate(ids):
+            images = self._client_batch(cid, velocities[i])
+            t, kt, kvecs, loss = self._moco_local(
+                self.global_tree, self.key_tree, self.global_queue,
+                images, cks[i], lr)
+            trees.append(t)
+            losses.append(float(loss))
+            kvec_list.append(kvecs)
+        # vehicles upload k-values; RSU merges them into the global queue
+        self.global_queue = ssl.fedco_merge_queues(self.global_queue, kvec_list)
+        self.global_tree = agg.aggregate_fedavg(trees)
+        self.key_tree = jax.tree.map(jnp.copy, self.global_tree)
+        rec = {"round": r, "loss": float(np.mean(losses)),
+               "velocities": np.asarray(velocities).tolist(), "lr": float(lr)}
+        self.history.append(rec)
+        return rec
+
+    def run(self, rounds: Optional[int] = None, log_every: int = 10,
+            parallel: bool = True):
+        for r in range(rounds if rounds is not None else self.cfg.rounds):
+            rec = self.round(r, parallel=parallel)
+            if log_every and r % log_every == 0:
+                print(f"[round {r:4d}] loss={rec['loss']:.4f} lr={rec['lr']:.4f}")
+        return self.history
+
+
+def gradient_std(losses) -> float:
+    """Paper Fig. 6 stability metric: std of the loss-curve gradient."""
+    l = np.asarray(losses, np.float64)
+    return float(np.std(np.diff(l)))

@@ -1,0 +1,79 @@
+"""Hierarchical (two-level) blur-weighted aggregation — beyond-paper.
+
+The paper has ONE RSU. A deployed vehicular network has many RSUs, each
+aggregating its own vehicles, with a regional server (MEC / cloud) merging
+the RSU models. Natural extension of Eq. 11:
+
+  level 1 (RSU r):   theta_r = sum_{n in r} w_n theta_n,
+                     w_n ∝ (Σ_r L − L_n)   over vehicles at RSU r
+  level 2 (region):  theta   = sum_r W_r theta_r,
+                     W_r ∝ (Σ L̄ − L̄_r)    over RSU mean blur levels,
+                     optionally scaled by each RSU's vehicle count.
+
+This maps 1:1 onto the production mesh: level 1 = weighted psum over
+"data", level 2 = weighted psum over "pod" — the two-stage form of the
+single collective in launch/steps.py. `hierarchical_equals_flat` shows
+when the two coincide (count-scaled level-2 weights + equal blur).
+
+Host-level forms here; the mesh-level two-stage reduce is
+`two_stage_weighted_psum`. Equivalence covered by tests/test_hierarchical.py.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import (_weighted_tree_sum, flsimco_weights,
+                                    weighted_psum_tree)
+
+
+def aggregate_hierarchical(groups: Sequence[Sequence], blur_groups: Sequence,
+                           count_scaled: bool = True):
+    """groups[r] = list of client trees at RSU r; blur_groups[r] = (N_r,)
+    blur levels. Returns the region-level global model."""
+    rsu_models = []
+    rsu_blur = []
+    rsu_count = []
+    for trees, blur in zip(groups, blur_groups):
+        blur = jnp.asarray(blur, jnp.float32)
+        rsu_models.append(_weighted_tree_sum(trees, flsimco_weights(blur)))
+        rsu_blur.append(blur.mean())
+        rsu_count.append(len(trees))
+    W = flsimco_weights(jnp.stack(rsu_blur))
+    if count_scaled:
+        c = jnp.asarray(rsu_count, jnp.float32)
+        W = W * c
+        W = W / jnp.sum(W)
+    return _weighted_tree_sum(rsu_models, W)
+
+
+def two_stage_weighted_psum(tree, blur_level, *, rsu_axis="data",
+                            region_axis="pod", count_scaled=True):
+    """Mesh-level hierarchical Eq. 11: weighted psum over `rsu_axis`, then
+    over `region_axis`. Call inside shard_map with both axes bound.
+
+    blur_level: this cohort's scalar L. With count-scaled level-2 weights
+    and equal per-RSU cohort counts this equals the flat single-psum form.
+    """
+    L = jnp.asarray(blur_level, jnp.float32)
+    # level 1: vehicles within the RSU
+    tot1 = jax.lax.psum(L, rsu_axis)
+    n1 = jax.lax.psum(jnp.ones(()), rsu_axis)
+    w1 = (tot1 - L) / jnp.maximum(tot1, 1e-12)
+    s1 = jax.lax.psum(w1, rsu_axis)
+    w1 = jnp.where(s1 > 1e-12, w1 / jnp.maximum(s1, 1e-12), 1.0 / n1)
+    rsu_model = weighted_psum_tree(tree, w1, rsu_axis)
+    # level 2: RSUs within the region. psum over `region_axis` alone sums
+    # one representative per pod (the rsu-level quantities are replicated
+    # across rsu_axis after the level-1 psum) — no double counting.
+    Lbar = tot1 / n1
+    tot2 = jax.lax.psum(Lbar, region_axis)
+    n2 = jax.lax.psum(jnp.ones(()), region_axis)
+    w2 = (tot2 - Lbar) / jnp.maximum(tot2, 1e-12)
+    if count_scaled:
+        w2 = w2 * n1
+    s2 = jax.lax.psum(w2, region_axis)
+    w2 = jnp.where(s2 > 1e-12, w2 / jnp.maximum(s2, 1e-12), 1.0 / n2)
+    return weighted_psum_tree(rsu_model, w2, region_axis)

@@ -1,0 +1,140 @@
+"""Self-supervised learning machinery: augmentations + baselines.
+
+* pi1 / pi2 — FLSimCo Sec. 4 Step 2 image augmentations, implemented as
+  pure-JAX ops (no PIL/torchvision in this container):
+    pi1: horizontal flip (p=.5) -> grayscale (p=.2)
+    pi2: color jitter (brightness/contrast/saturation/hue, range .4, p=.8)
+         -> grayscale (p=.4)
+* token views — the framework's extension of the DT objective to token
+  architectures (DESIGN.md §2): two stochastic token-dropout/masking views.
+* MoCo machinery (momentum encoder EMA + negative queue) and the FedCo
+  global-queue protocol — the paper's comparison baselines.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+GRAY_W = jnp.array([0.299, 0.587, 0.114], jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# image augmentations (pi1 / pi2)
+# --------------------------------------------------------------------------
+
+def _grayscale(x):
+    g = jnp.tensordot(x, GRAY_W, axes=[[-1], [0]])[..., None]
+    return jnp.broadcast_to(g, x.shape)
+
+
+def _maybe(key, p, fn, x):
+    do = jax.random.bernoulli(key, p, (x.shape[0],))
+    return jnp.where(do[:, None, None, None], fn(x), x)
+
+
+def _jitter_factors(key, b, rng=0.4):
+    ks = jax.random.split(key, 4)
+    f = [jax.random.uniform(k, (b, 1, 1, 1), minval=1 - rng, maxval=1 + rng)
+         for k in ks[:3]]
+    hue = jax.random.uniform(ks[3], (b, 1, 1), minval=-rng, maxval=rng)
+    return f[0], f[1], f[2], hue
+
+
+def _color_jitter(key, x, rng=0.4):
+    br, ct, sat, hue = _jitter_factors(key, x.shape[0], rng)
+    x = x * br                                               # brightness
+    mean = x.mean(axis=(1, 2, 3), keepdims=True)
+    x = (x - mean) * ct + mean                               # contrast
+    g = _grayscale(x)
+    x = g + (x - g) * sat[..., None] if sat.ndim == 3 else g + (x - g) * sat
+    # hue: rotate chroma around the gray axis (small-angle YIQ rotation)
+    theta = hue[..., None] * jnp.pi
+    cos, sin = jnp.cos(theta), jnp.sin(theta)
+    y = _grayscale(x)
+    r, g_, b = x[..., 0:1], x[..., 1:2], x[..., 2:3]
+    i = 0.596 * r - 0.274 * g_ - 0.322 * b
+    q = 0.211 * r - 0.523 * g_ + 0.312 * b
+    i2 = cos * i - sin * q
+    q2 = sin * i + cos * q
+    yv = y[..., 0:1]
+    x = jnp.concatenate([
+        yv + 0.956 * i2 + 0.621 * q2,
+        yv - 0.272 * i2 - 0.647 * q2,
+        yv - 1.106 * i2 + 1.703 * q2,
+    ], axis=-1)
+    return x
+
+
+def pi1(key, x):
+    """Horizontal flip p=.5 -> grayscale p=.2. x: (B,H,W,3) in [0,1]."""
+    k1, k2 = jax.random.split(key)
+    x = _maybe(k1, 0.5, lambda im: im[:, :, ::-1, :], x)
+    x = _maybe(k2, 0.2, _grayscale, x)
+    return x
+
+
+def pi2(key, x):
+    """Color jitter (range .4) p=.8 -> grayscale p=.4."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    jittered = _color_jitter(k2, x)
+    do = jax.random.bernoulli(k1, 0.8, (x.shape[0],))
+    x = jnp.where(do[:, None, None, None], jittered, x)
+    x = _maybe(k3, 0.4, _grayscale, x)
+    return jnp.clip(x, 0.0, 1.0)
+
+
+# --------------------------------------------------------------------------
+# token views (DT-SSL for sequence architectures)
+# --------------------------------------------------------------------------
+
+def token_view(key, tokens, mask_id: int, drop_p: float = 0.15):
+    """Stochastic masking view of a token batch (B, S)."""
+    drop = jax.random.bernoulli(key, drop_p, tokens.shape)
+    return jnp.where(drop, mask_id, tokens)
+
+
+# --------------------------------------------------------------------------
+# MoCo / FedCo machinery
+# --------------------------------------------------------------------------
+
+class MoCoState(NamedTuple):
+    key_params: object      # momentum (EMA) encoder params
+    queue: jnp.ndarray      # (K, D) L2-normalized negatives
+    ptr: jnp.ndarray        # scalar int32 — ring pointer
+
+
+def init_moco_state(params, queue_len: int, dim: int, key) -> MoCoState:
+    q = jax.random.normal(key, (queue_len, dim), jnp.float32)
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    return MoCoState(key_params=jax.tree.map(jnp.asarray, params),
+                     queue=q, ptr=jnp.zeros((), jnp.int32))
+
+
+def momentum_update(key_params, query_params, m: float = 0.99):
+    """EMA key-encoder update (MoCo)."""
+    return jax.tree.map(lambda kp, qp: m * kp + (1 - m) * qp.astype(kp.dtype),
+                        key_params, query_params)
+
+
+def queue_push(state: MoCoState, keys: jnp.ndarray) -> MoCoState:
+    """Ring-buffer enqueue of a batch of k-vectors (B, D)."""
+    K = state.queue.shape[0]
+    B = keys.shape[0]
+    idx = (state.ptr + jnp.arange(B)) % K
+    q = state.queue.at[idx].set(keys.astype(state.queue.dtype))
+    return state._replace(queue=q, ptr=(state.ptr + B) % K)
+
+
+def fedco_merge_queues(global_queue, client_keys_list):
+    """FedCo: RSU concatenates uploaded k-value batches into the global
+    queue (newest first), truncated to the global queue length.
+
+    This is exactly the step FLSimCo criticizes: mixing k-values from
+    different encoders breaks MoCo's negative-key consistency, and the
+    uploads themselves leak reconstructable representations.
+    """
+    K = global_queue.shape[0]
+    allk = jnp.concatenate(list(client_keys_list) + [global_queue], axis=0)
+    return allk[:K]

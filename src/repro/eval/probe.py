@@ -1,0 +1,79 @@
+"""Representation-quality evaluation — the paper's Top-1 test protocol.
+
+The paper ranks predicted labels by probability and scores Top-1. For an
+SSL encoder that protocol needs a probe; we provide both standard ones:
+
+* kNN probe (weighted kNN on L2-normalized features, the usual contrastive
+  -learning monitor) — cheap, no extra training, used by benchmarks.
+* linear probe (one linear layer trained on frozen features with SGD) —
+  closer to the paper's fine-tune-then-classify setting.
+
+Each experiment is averaged over repeats upstream (paper: 3 runs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.resnet import resnet_apply
+
+
+def encode(tree, images, batch: int = 256, use_projector: bool = False):
+    """Frozen-encoder features (pre-projector 512-D by default)."""
+    outs = []
+    fn = jax.jit(lambda t, x: resnet_apply(t, x, train=False)[:2])
+    for i in range(0, len(images), batch):
+        z, h, = fn(tree, jnp.asarray(images[i:i + batch]))
+        outs.append(np.asarray(z if use_projector else h))
+    f = np.concatenate(outs)
+    f = f / np.maximum(np.linalg.norm(f, axis=-1, keepdims=True), 1e-8)
+    return f
+
+
+def knn_top1(train_feats, train_labels, test_feats, test_labels,
+             k: int = 20, tau: float = 0.1) -> float:
+    """Weighted-kNN Top-1 accuracy (Wu et al. protocol)."""
+    n_classes = int(train_labels.max()) + 1
+    correct = 0
+    bs = 512
+    for i in range(0, len(test_feats), bs):
+        sims = test_feats[i:i + bs] @ train_feats.T                # (b, N)
+        topk = np.argpartition(-sims, k, axis=1)[:, :k]
+        w = np.exp(np.take_along_axis(sims, topk, axis=1) / tau)
+        votes = np.zeros((len(topk), n_classes))
+        for c in range(n_classes):
+            votes[:, c] = (w * (train_labels[topk] == c)).sum(axis=1)
+        pred = votes.argmax(axis=1)
+        correct += (pred == test_labels[i:i + bs]).sum()
+    return float(correct) / len(test_feats)
+
+
+def linear_probe_top1(train_feats, train_labels, test_feats, test_labels,
+                      epochs: int = 20, lr: float = 0.5, seed: int = 0) -> float:
+    """Train a linear classifier on frozen features; return test Top-1."""
+    rng = np.random.RandomState(seed)
+    n_classes = int(train_labels.max()) + 1
+    d = train_feats.shape[1]
+    W = jnp.zeros((d, n_classes), jnp.float32)
+    b = jnp.zeros((n_classes,), jnp.float32)
+    x = jnp.asarray(train_feats)
+    y = jnp.asarray(train_labels)
+
+    @jax.jit
+    def step(W, b, xb, yb, lr):
+        def loss_fn(Wb):
+            W_, b_ = Wb
+            logits = xb @ W_ + b_
+            return -jax.nn.log_softmax(logits)[jnp.arange(len(yb)), yb].mean()
+        g = jax.grad(loss_fn)((W, b))
+        return W - lr * g[0], b - lr * g[1]
+
+    bs = 512
+    for e in range(epochs):
+        perm = rng.permutation(len(x))
+        for i in range(0, len(x), bs):
+            idx = perm[i:i + bs]
+            W, b = step(W, b, x[idx], y[idx], lr * (0.5 ** (e // 8)))
+    logits = np.asarray(jnp.asarray(test_feats) @ W + b)
+    return float((logits.argmax(1) == test_labels).mean())

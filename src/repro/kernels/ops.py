@@ -1,0 +1,142 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+* ``dt_loss(q, k, ...)`` — differentiable (custom_vjp: Pallas forward, the
+  analytic jnp backward recomputes the similarity tile-free, flash-style).
+* ``wagg_tree(trees, w)`` — blur-weighted aggregation of a list of client
+  pytrees through the fused kernel (ravel -> kernel -> unravel).
+* ``rwkv6(r, k, v, logw, u)`` — chunked recurrence (forward).
+
+On this CPU container kernels execute in interpret mode; on TPU set
+``interpret=False`` (the default flips on the backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.dt_loss import BM, dt_loss_fwd_pallas
+from repro.kernels.rwkv6 import CHUNK, rwkv6_pallas
+from repro.kernels.wagg import BP, wagg_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x, multiple):
+    M = x.shape[0]
+    pad = (-M) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x, M
+
+
+# --------------------------------------------------------------------------
+# dt loss
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def dt_loss(q, k, tau_alpha: float = 0.1, tau_beta: float = 1.0,
+            interpret: bool | None = None):
+    """Mean dual-temperature loss over in-batch similarities (fused)."""
+    loss, _, _, _ = _dt_fwd(q, k, tau_alpha, tau_beta, interpret)
+    return loss
+
+
+def _dt_fwd(q, k, tau_alpha, tau_beta, interpret):
+    interpret = _default_interpret() if interpret is None else interpret
+    M = q.shape[0]
+    qp, _ = _pad_rows(q, BM)
+    kp, _ = _pad_rows(k, BM)
+    lvec, lse_a, lse_b, pos = dt_loss_fwd_pallas(
+        qp, kp, tau_alpha, tau_beta, n_valid=M, interpret=interpret)
+    loss = lvec[:M].mean()
+    return loss, lse_a[:M], lse_b[:M], pos[:M]
+
+
+def _dt_fwd_vjp(q, k, tau_alpha, tau_beta, interpret):
+    loss, lse_a, lse_b, pos = _dt_fwd(q, k, tau_alpha, tau_beta, interpret)
+    return loss, (q, k, lse_a, pos)
+
+
+def _dt_bwd(tau_alpha, tau_beta, interpret, res, g):
+    """d/dq, d/dk of mean_i [ -w_i * (pos_i/ta - lse_a_i) ] with w_i
+    treated as constant (stop_gradient in Eq. 6)."""
+    q, k, lse_a, pos = res
+    M = q.shape[0]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    sim = qf @ kf.T
+    log_pa = pos / tau_alpha - lse_a
+    w_a = 1.0 - jnp.exp(log_pa)
+    w_b = 1.0 - jnp.exp(pos / tau_beta -
+                        jax.nn.logsumexp(sim / tau_beta, axis=-1))
+    weight = w_b / jnp.maximum(w_a, 1e-8)
+    p_a = jnp.exp(sim / tau_alpha - lse_a[:, None])          # (M, M)
+    # dL_i/dsim_ij = w_i/ta * (p_a_ij - delta_ij); mean over i adds 1/M
+    coef = (g * weight / (tau_alpha * M))[:, None]
+    dsim = coef * (p_a - jnp.eye(M, dtype=jnp.float32))
+    dq = (dsim @ kf).astype(q.dtype)
+    dk = (dsim.T @ qf).astype(k.dtype)
+    return dq, dk
+
+
+dt_loss.defvjp(_dt_fwd_vjp, _dt_bwd)
+
+
+# --------------------------------------------------------------------------
+# weighted aggregation
+# --------------------------------------------------------------------------
+
+def wagg_flat(stacked, w, interpret: bool | None = None):
+    """stacked (N, P) x w (N,) -> (P,) f32 via the fused kernel (pads P)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    N, P = stacked.shape
+    pad = (-P) % BP
+    if pad:
+        stacked = jnp.concatenate(
+            [stacked, jnp.zeros((N, pad), stacked.dtype)], axis=1)
+    out = wagg_pallas(stacked, w, interpret=interpret)
+    return out[:P]
+
+
+def wagg_tree(trees: Sequence, w, interpret: bool | None = None):
+    """Weighted sum of client pytrees via one fused pass over flat params."""
+    flats = []
+    for t in trees:
+        leaves = jax.tree.leaves(t)
+        flats.append(jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                                      for l in leaves]))
+    stacked = jnp.stack(flats)
+    w = jnp.asarray(w, jnp.float32)
+    out = wagg_flat(stacked, w, interpret)
+    # unravel into the first tree's structure
+    leaves, treedef = jax.tree.flatten(trees[0])
+    new_leaves, off = [], 0
+    for l in leaves:
+        n = l.size
+        new_leaves.append(out[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+# --------------------------------------------------------------------------
+# rwkv6
+# --------------------------------------------------------------------------
+
+def rwkv6(r, k, v, logw, u, interpret: bool | None = None):
+    """Chunked RWKV6 recurrence; pads S to the chunk size."""
+    interpret = _default_interpret() if interpret is None else interpret
+    BH, S, D = r.shape
+    pad = (-S) % CHUNK
+    if pad:
+        z = jnp.zeros((BH, pad, D), r.dtype)
+        r, k, v = (jnp.concatenate([t, z], 1) for t in (r, k, v))
+        logw = jnp.concatenate([logw, jnp.full((BH, pad, D), -1e-4, logw.dtype)], 1)
+    o, state = rwkv6_pallas(r, k, v, logw, u, interpret=interpret)
+    return o[:, :S], state

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are the semantic definitions; kernels/*.py must match them for all
+shapes/dtypes the tests sweep. They are also the CPU fallback path used
+when ``use_pallas=False``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# dual-temperature loss (in-batch form)
+# --------------------------------------------------------------------------
+
+def dt_loss_fwd_ref(q, k, tau_alpha: float, tau_beta: float):
+    """Returns (loss_vec (B,), lse_a (B,), lse_b (B,), pos (B,)).
+
+    loss_i = -sg[(1-softmax_b(pos))/(1-softmax_a(pos))] * log softmax_a(pos)
+    over the in-batch similarity row sim_i = q_i @ k^T (positive = diag).
+    """
+    sim = (q.astype(jnp.float32) @ k.astype(jnp.float32).T)
+    pos = jnp.diagonal(sim)
+    lse_a = jax.nn.logsumexp(sim / tau_alpha, axis=-1)
+    lse_b = jax.nn.logsumexp(sim / tau_beta, axis=-1)
+    log_pa = pos / tau_alpha - lse_a
+    w_a = 1.0 - jnp.exp(log_pa)
+    w_b = 1.0 - jnp.exp(pos / tau_beta - lse_b)
+    weight = w_b / jnp.maximum(w_a, 1e-8)
+    loss = -weight * log_pa
+    return loss, lse_a, lse_b, pos
+
+
+def dt_loss_ref(q, k, tau_alpha: float = 0.1, tau_beta: float = 1.0):
+    return dt_loss_fwd_ref(q, k, tau_alpha, tau_beta)[0].mean()
+
+
+# --------------------------------------------------------------------------
+# weighted aggregation
+# --------------------------------------------------------------------------
+
+def wagg_ref(stacked, w):
+    """stacked: (N, P) client-stacked flat params; w: (N,) -> (P,)."""
+    return jnp.tensordot(w.astype(jnp.float32),
+                         stacked.astype(jnp.float32), axes=1)
+
+
+# --------------------------------------------------------------------------
+# rwkv6 chunked recurrence (single head-batch layout)
+# --------------------------------------------------------------------------
+
+def rwkv6_ref(r, k, v, logw, u, state0=None):
+    """Sequential oracle. r,k,v,logw: (BH, S, D); u: (D,) or (BH, D).
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ; o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    Returns (o (BH,S,D), state (BH,D,D)).
+    """
+    BH, S, D = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((BH, D, D), jnp.float32)
+    u = jnp.broadcast_to(u, (BH, D)) if u.ndim == 1 else u
+
+    def step(S_, xs):
+        rt, kt, vt, lwt = xs
+        kv = kt[:, :, None] * vt[:, None, :]
+        o = jnp.einsum("bd,bde->be", rt, S_ + u[:, :, None] * kv)
+        S_ = S_ * jnp.exp(lwt)[:, :, None] + kv
+        return S_, o
+
+    xs = tuple(t.astype(jnp.float32).transpose(1, 0, 2) for t in (r, k, v, logw))
+    state, o = jax.lax.scan(step, state0, xs)
+    return o.transpose(1, 0, 2), state

@@ -1,0 +1,45 @@
+"""Fused blur-weighted aggregation — Pallas TPU kernel.
+
+Eq. (11) at the RSU is sum_n w_n * theta_n over N stacked client models.
+Done naively (N scale-then-add tree ops) the parameter payload crosses HBM
+N times plus N-1 more for the partial sums. This kernel tiles the flat
+parameter axis into VMEM blocks and reduces all N clients inside one pass:
+exactly P reads + P/N writes of traffic, the memory-bound optimum.
+
+Grid: (P / BP,). Block: (N, BP) client-major so the N-reduction is a
+VREG-resident dot with the (N,) weight vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BP = 2048
+
+
+def _wagg_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (N, BP)
+    w = w_ref[...].astype(jnp.float32)          # (N,)
+    o_ref[...] = jax.lax.dot_general(
+        w[None, :], x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]
+
+
+def wagg_pallas(stacked, w, *, interpret: bool = True):
+    """stacked: (N, P) with P % BP == 0 (wrapper pads); w: (N,) -> (P,)."""
+    N, P = stacked.shape
+    assert P % BP == 0
+    return pl.pallas_call(
+        _wagg_kernel,
+        grid=(P // BP,),
+        in_specs=[
+            pl.BlockSpec((N, BP), lambda i: (0, i)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BP,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((P,), jnp.float32),
+        interpret=interpret,
+    )(stacked, w)

@@ -1,0 +1,288 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices form the production meshes; jit(...).lower(...specs)
+.compile() must succeed for all 10 architectures x 4 input shapes on both
+the 16x16 single-pod and 2x16x16 multi-pod mesh. Records
+memory_analysis() / cost_analysis() plus the HLO collective byte counts
+(for EXPERIMENTS.md §Roofline) into benchmarks/results/dryrun.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch a,b] [--shape s,..]
+      [--mesh single,multi] [--force] [--objective lm]
+"""
+# The VERY FIRST lines — before any other import, jax locks the device
+# count on first init:
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_configs
+from repro.launch import steps as st
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+               "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "s64": 8}
+
+_COLL_LINE = re.compile(
+    r"=\s*(\(?[a-z0-9_\[\],{}\s()]+?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-operand bytes of every collective op in the HLO.
+
+    Counts the *result* shapes on the LHS type annotation of each
+    collective instruction; '-done' ops are skipped so async pairs are not
+    double-counted.
+    """
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _COLL_LINE.search(s)
+        if not m or "-done(" in s:
+            continue
+        kind = m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE.findall(m.group(1)):
+            b = DTYPE_BYTES.get(dt, 4)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * b
+        out[kind] = out.get(kind, 0) + nbytes
+        out["count_" + kind] = out.get("count_" + kind, 0) + 1
+    return out
+
+
+def _jsonable(d):
+    if isinstance(d, dict):
+        return {k: _jsonable(v) for k, v in d.items()}
+    if isinstance(d, (list, tuple)):
+        return [_jsonable(v) for v in d]
+    if isinstance(d, (int, str, bool)) or d is None:
+        return d
+    try:
+        return float(d)
+    except Exception:
+        return str(d)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               objective: str = "lm", kv_dtype: str = "bf16") -> dict:
+    import jax.numpy as _jnp
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "kind": shape.kind, "objective": objective,
+                 "kv_dtype": kv_dtype}
+    cdt = _jnp.int8 if kv_dtype == "int8" else _jnp.bfloat16
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        specs = st.input_specs(cfg, shape, mesh, cache_dtype=cdt)
+        p_sds, _ = st.params_specs(cfg, mesh)
+        # §Perf iteration 5: donate the aliasable state — params+momentum in
+        # train, the KV cache in decode — so the updated copy reuses the
+        # input buffers instead of doubling peak memory.
+        if shape.kind == "train":
+            fn, nm = st.make_train_step(cfg, shape, mesh, objective=objective)
+            mom_sds = jax.tree.map(lambda s: s, p_sds)  # same shape/sharding
+            lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(
+                p_sds, mom_sds, specs)
+            rec["n_micro"] = nm
+        elif shape.kind == "prefill":
+            fn = st.make_prefill_step(cfg, shape, mesh)
+            lowered = jax.jit(fn).lower(p_sds, specs)
+        else:
+            fn = st.make_decode_step(cfg, shape, mesh)
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(p_sds, specs)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed", "optimal_seconds",
+                             "bytes accessed output")}
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+    rec["total_s"] = round(time.time() - t0, 2)
+    rec["n_params"] = cfg.n_params()
+    rec["n_active_params"] = cfg.n_active_params()
+    return rec
+
+
+def _depth_points(cfg):
+    """Two reduced-depth full-width variants for scan-cost calibration."""
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_period
+        return per, 2 * per
+    return 2, 4
+
+
+def _at_depth(cfg, L: int):
+    import dataclasses
+    kw = {"n_layers": L}
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = L
+    if cfg.moe_first_dense_layers:
+        kw["moe_first_dense_layers"] = 1
+    return dataclasses.replace(cfg, **kw)
+
+
+def calibrate_one(arch: str, shape_name: str, multi_pod: bool,
+                  objective: str = "lm") -> dict:
+    """XLA cost_analysis counts while-loop (lax.scan) bodies ONCE, not
+    x trip-count, so deep models under-report FLOPs/bytes/collectives by
+    ~n_layers. Calibration: lower the SAME arch at two reduced depths
+    (full width), take the per-layer increment, extrapolate to full depth:
+
+        cost(L) ~= cost(L1) + (L - L1) * (cost(L2) - cost(L1)) / (L2 - L1)
+
+    Calibration lowers with n_micro=1 (flops are micro-invariant at equal
+    global batch) and with the layer / kv-chunk scans UNROLLED so every
+    body instance is visible to the analyzer (see models/scan_ctx.py).
+    The RWKV/SSM intra-layer time-chunk scans stay rolled — their
+    recurrence FLOPs are <2% of the surrounding projections (noted in
+    EXPERIMENTS.md §Roofline limitations).
+    Enc-dec archs scale encoder+decoder depth together (both are 24 at
+    full scale, so the shared multiplier is exact).
+    """
+    import dataclasses
+
+    from repro.models import scan_ctx
+    base = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    L1, L2 = _depth_points(base)
+    costs = []
+    for L in (L1, L2):
+        cfg = _at_depth(base, L)
+        with jax.set_mesh(mesh), scan_ctx.unrolled(layers=scan_ctx.FULL,
+                                                   kv=scan_ctx.FULL):
+            specs = st.input_specs(cfg, shape, mesh)
+            p_sds, _ = st.params_specs(cfg, mesh)
+            if shape.kind == "train":
+                fn, _ = st.make_train_step(cfg, shape, mesh,
+                                           objective=objective, n_micro=1)
+                lowered = jax.jit(fn).lower(p_sds, p_sds, specs)
+            elif shape.kind == "prefill":
+                fn = st.make_prefill_step(cfg, shape, mesh)
+                lowered = jax.jit(fn).lower(p_sds, specs)
+            else:
+                fn = st.make_decode_step(cfg, shape, mesh)
+                lowered = jax.jit(fn).lower(p_sds, specs)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            coll = collective_bytes(compiled.as_text())
+            costs.append({
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": float(sum(v for k, v in coll.items()
+                                  if not k.startswith("count_"))),
+            })
+    L = base.n_layers
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        per_layer = (costs[1][k] - costs[0][k]) / (L2 - L1)
+        out[k] = costs[0][k] + per_layer * (L - L1)
+        out[k + "_per_layer"] = per_layer
+    out["depth_points"] = [L1, L2]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--objective", default="lm")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="add depth-extrapolated cost estimates")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--out", default=os.path.join(RESULTS, "dryrun.json"))
+    args = ap.parse_args()
+
+    archs = (args.arch.split(",") if args.arch else
+             [a for a in list_configs() if a != "resnet18-cifar"])
+    shapes = args.shape.split(",") if args.shape else list(INPUT_SHAPES)
+    meshes = args.mesh.split(",")
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                key = f"{arch}|{shape}|{m}|{args.objective}"
+                prev = results.get(key, {})
+                done = prev.get("ok") and (not args.calibrate or
+                                           "calibrated" in prev)
+                if done and not args.force:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    if prev.get("ok") and args.calibrate and not args.force:
+                        rec = dict(prev)
+                    else:
+                        rec = dryrun_one(arch, shape, m == "multi",
+                                         args.objective, args.kv_dtype)
+                    if args.calibrate:
+                        rec["calibrated"] = calibrate_one(
+                            arch, shape, m == "multi", args.objective)
+                    rec["ok"] = True
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"flops={rec['cost'].get('flops', 0):.3e} "
+                          f"coll={sum(v for k, v in rec['collectives'].items() if not k.startswith('count_')):.3e}B",
+                          flush=True)
+                except Exception as e:
+                    rec = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"  FAIL: {rec['error']}", flush=True)
+                results[key] = _jsonable(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} combos OK -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

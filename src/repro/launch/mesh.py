@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Target: TPU v5e pods — 16x16 = 256 chips per pod, 2 pods = 512 chips.
+Axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+The federated cohort axis of FLSimCo is ("pod", "data") — each cohort
+(vehicle group) owns a batch slice; blur-weighted aggregation reduces over
+those axes (DESIGN.md §2).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 CPU device; only dryrun.py forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names — lets the same pjit
+    code run on the CPU container for integration tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch (and federated cohorts) shard over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, names) -> int:
+    s = 1
+    for n in ([names] if isinstance(names, str) else names):
+        s *= mesh.shape[n]
+    return s

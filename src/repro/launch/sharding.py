@@ -1,0 +1,252 @@
+"""Parameter / activation / cache sharding rules.
+
+Strategy (DESIGN.md §4): Megatron-style tensor parallelism on the `model`
+axis + FSDP-style weight sharding on the ("pod","data") axes for the
+multi-hundred-GB architectures, with per-tensor divisibility checks that
+degrade gracefully to replication (hymba's 25 heads, qwen2's kv=2, ...).
+
+Everything funnels through `sanitize`, which drops any axis that does not
+divide the corresponding tensor dimension — so every (arch x shape x mesh)
+combination lowers, and the roofline report shows the cost of whatever had
+to be replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+
+def _size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def sanitize(mesh, spec: P, shape) -> P:
+    """Drop spec axes that don't divide the tensor dim; keeps the rest."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        if dim % _size(mesh, axes) == 0:
+            out.append(axes)
+        elif not isinstance(axes, str):  # try a prefix of the tuple
+            kept = []
+            for a in axes:
+                if dim % _size(mesh, tuple(kept) + (a,)) == 0:
+                    kept.append(a)
+            out.append(tuple(kept) if kept else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def param_spec(mesh, path: str, shape, *, fsdp: bool = True,
+               stacked_prefix: int = 0) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    `stacked_prefix` = number of leading stacked-layer axes (kept
+    unsharded). `fsdp=True` adds ("pod","data") sharding on the non-model
+    dim of large 2-D weights.
+    """
+    fs = batch_axes(mesh) if fsdp else None
+    core = shape[stacked_prefix:]
+    nd = len(core)
+
+    def with_prefix(*spec):
+        return P(*((None,) * stacked_prefix + spec))
+
+    last = path.rsplit("/", 1)[-1]
+
+    # --- embeddings / unembed ------------------------------------------------
+    if last == "embed":                          # (V, d)
+        return sanitize(mesh, with_prefix("model", fs), shape)
+    if last == "unembed":                        # (d, V)
+        return sanitize(mesh, with_prefix(fs, "model"), shape)
+    if last in ("vision_proj", "audio_adapter"):
+        return sanitize(mesh, with_prefix(None, "model"), shape)
+
+    # --- MoE -----------------------------------------------------------------
+    if last == "router":                         # (d, E)
+        return sanitize(mesh, with_prefix(None, "model"), shape)
+    if "moe" in path and last in ("w_up", "w_gate", "w_down") and nd == 3:
+        # (E, d, f) / (E, f, d): expert-parallel on model, FSDP on dim 1
+        return sanitize(mesh, with_prefix("model", fs, None), shape)
+
+    # --- attention -----------------------------------------------------------
+    if last in ("wq", "wk", "wv"):               # (d, H*hd)
+        return sanitize(mesh, with_prefix(fs, "model"), shape)
+    if last == "wo":                             # (H*hd, d)
+        return sanitize(mesh, with_prefix("model", fs), shape)
+    if last in ("bq", "bk", "bv"):
+        return sanitize(mesh, with_prefix("model"), shape)
+
+    # --- MLP -----------------------------------------------------------------
+    if last in ("w_up", "w_gate"):               # (d, f)
+        return sanitize(mesh, with_prefix(fs, "model"), shape)
+    if last == "w_down":                         # (f, d)
+        return sanitize(mesh, with_prefix("model", fs), shape)
+
+    # --- rwkv ----------------------------------------------------------------
+    if last in ("wr", "wk", "wv", "wg"):         # (d, d) — caught above for attn
+        return sanitize(mesh, with_prefix(fs, "model"), shape)
+    if last == "w_lora_a":
+        return sanitize(mesh, with_prefix(fs, None), shape)
+    if last == "w_lora_b":
+        return sanitize(mesh, with_prefix(None, "model"), shape)
+
+    # --- ssm -----------------------------------------------------------------
+    if last == "w_in":                           # (d, 2*di)
+        return sanitize(mesh, with_prefix(fs, "model"), shape)
+    if last == "w_out":                          # (di, d)
+        return sanitize(mesh, with_prefix("model", fs), shape)
+    if last in ("w_dt",):                        # (di, di)
+        return sanitize(mesh, with_prefix(fs, "model"), shape)
+    if last in ("w_B", "w_C"):                   # (di, st)
+        return sanitize(mesh, with_prefix("model", None), shape)
+    if last in ("A_log", "D", "b_dt"):           # (di, st)/(di,)
+        return sanitize(mesh, with_prefix("model"), shape)
+    if last == "conv":                           # (4, di)
+        return sanitize(mesh, with_prefix(None, "model"), shape)
+
+    # --- projector / probe / small ------------------------------------------
+    if nd == 2 and min(core) >= 128:
+        return sanitize(mesh, with_prefix(fs, "model"), shape)
+    return P()  # norms, biases, scalars, mu, u, w0 — replicated
+
+
+def params_shardings(mesh, params, *, fsdp: bool = True, vlm: bool = False):
+    """NamedSharding pytree matching `params` (from transformer.init_params)."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = 0
+        if ps.startswith(("blocks", "dense_blocks", "cross_blocks", "enc_blocks")):
+            stacked = 1
+            if vlm and ps.startswith("blocks/"):
+                stacked = 2                       # (n_super, n_self, ...)
+        spec = param_spec(mesh, ps, leaf.shape, fsdp=fsdp,
+                          stacked_prefix=stacked)
+        return NamedSharding(mesh, sanitize(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------------
+# data / cache shardings
+# --------------------------------------------------------------------------
+
+def batch_spec(mesh, global_batch: int) -> P:
+    """Shard batch over (pod,data) when divisible, else replicate."""
+    ba = batch_axes(mesh)
+    if global_batch % _size(mesh, ba) == 0:
+        return P(ba)
+    # try data-only
+    if "data" in ba and global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)
+
+
+def tokens_sharding(mesh, global_batch: int):
+    return NamedSharding(mesh, P(*batch_spec(mesh, global_batch), None))
+
+
+def kv_cache_spec(mesh, shape, bax, prefix: int = 1) -> P:
+    """Preference chain for (L?, B, W, KH, hd) KV buffers: heads on model
+    if divisible, else head_dim, else the W axis, else replicate. Shared
+    between cache_shardings and the attention activation rule so the
+    decode path never reshards the cache (§Perf iteration 6)."""
+    pre = (None,) * prefix
+    # preference: heads (no collective at all) > W (contraction dim —
+    # GSPMD turns the QK/PV dots into partial-sum + all-reduce instead of
+    # replicating the cache) > head_dim
+    for cand in (P(*pre, bax, None, "model", None),
+                 P(*pre, bax, "model", None, None),
+                 P(*pre, bax, None, None, "model")):
+        if sanitize(mesh, cand, shape) == cand:
+            return cand
+    return sanitize(mesh, P(*pre, bax, None, None, None), shape)
+
+
+def cache_shardings(mesh, cache, global_batch: int):
+    """KV cache: batch on (pod,data); heads on model if divisible, else
+    head_dim, else the W (window/seq) axis; SSM/rwkv states: channel axis."""
+    b = batch_spec(mesh, global_batch)
+    bax = b[0] if len(b) else None
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shp = leaf.shape
+        last = ps.rsplit("/", 1)[-1]
+        if last in ("k", "v"):                    # (L, B, W, KH, hd)
+            return NamedSharding(mesh, kv_cache_spec(mesh, shp, bax))
+        if last in ("k_scale", "v_scale"):        # (L, B, W, KH)
+            full = kv_cache_spec(mesh, shp + (1,), bax)
+            return NamedSharding(mesh, sanitize(mesh, P(*tuple(full)[:4]), shp))
+        if last == "pos":                         # (L, B, W)
+            return NamedSharding(mesh, sanitize(mesh, P(None, bax, None), shp))
+        if last == "state" and leaf.ndim == 5:    # rwkv (L,B,H,D,D)
+            return NamedSharding(mesh, sanitize(
+                mesh, P(None, bax, "model", None, None), shp))
+        if last == "ssm":                         # (L,B,di,st)
+            return NamedSharding(mesh, sanitize(
+                mesh, P(None, bax, "model", None), shp))
+        if last == "conv":                        # (L,B,3,di)
+            return NamedSharding(mesh, sanitize(
+                mesh, P(None, bax, None, "model"), shp))
+        if last in ("x_last_t", "x_last_c"):      # (L,B,d)
+            return NamedSharding(mesh, sanitize(mesh, P(None, bax, None), shp))
+        if last == "ctx":                         # (B, T, d)
+            return NamedSharding(mesh, sanitize(mesh, P(bax, None, None), shp))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# --------------------------------------------------------------------------
+# activation rules for sharding_hooks
+# --------------------------------------------------------------------------
+
+def make_activation_rules(mesh, global_batch: int):
+    """Returns constrain(x, name) for repro.models.sharding_hooks."""
+    from jax.lax import with_sharding_constraint
+    b = batch_spec(mesh, global_batch)
+    bax = b[0] if len(b) else None
+    table = {
+        "tokens_bsd": P(bax, None, None),
+        "tokens_bsf": P(bax, None, "model"),
+        "attn_bshd": P(bax, None, "model", None),
+        "moe_ecd": P("model", None, None),
+        "logits_bsv": P(bax, None, "model"),
+    }
+
+    def constrain(x, name):
+        if name == "cache_kv":                   # (B, W, KH, hd)
+            spec = kv_cache_spec(mesh, x.shape, bax, prefix=0)
+            return with_sharding_constraint(x, NamedSharding(mesh, spec))
+        spec = table.get(name)
+        if spec is None:
+            return x
+        spec = sanitize(mesh, spec, x.shape)
+        return with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain

@@ -1,0 +1,39 @@
+"""Scan-unroll context for cost calibration.
+
+XLA's cost_analysis counts a while-loop body ONCE, not x trip-count, so
+scan-over-layers / kv-chunk scans under-report FLOPs by the trip count.
+The dry-run calibration lowers reduced-depth variants with scans UNROLLED
+(so every body instance is visible to the analyzer) and extrapolates.
+
+Default is unroll=1 (plain scan) everywhere; only dryrun's calibration
+flips this, inside a context manager.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_local = threading.local()
+
+FULL = -1  # sentinel: unroll the whole scan
+
+
+def get(kind: str) -> int:
+    return getattr(_local, kind, 1)
+
+
+def resolve(kind: str, length: int):
+    u = get(kind)
+    if u == FULL:
+        return length
+    return min(u, length) if u > 1 else 1
+
+
+@contextlib.contextmanager
+def unrolled(layers: int = 1, kv: int = 1, time: int = 1):
+    prev = (get("layers"), get("kv"), get("time"))
+    _local.layers, _local.kv, _local.time = layers, kv, time
+    try:
+        yield
+    finally:
+        _local.layers, _local.kv, _local.time = prev

@@ -1,0 +1,45 @@
+"""Optional activation-sharding hooks.
+
+Models stay pure-functional; the launcher installs a constraint function
+(typically ``jax.lax.with_sharding_constraint`` bound to a mesh + logical
+rules) so hot activations get explicit shardings during lowering. Default
+is identity, so unit tests / CPU runs never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+Array = "jax.Array"
+
+_local = threading.local()
+
+
+def _default(x, name: str):
+    return x
+
+
+def constrain(x, name: str):
+    """Apply the installed sharding constraint for logical activation `name`.
+
+    Names used by the model zoo:
+      tokens_bsd   — (batch, seq, d_model)
+      tokens_bsf   — (batch, seq, d_ff)   (MLP hidden)
+      attn_bshd    — (batch, seq, heads, head_dim)
+      moe_ecd      — (experts, capacity, d)
+      logits_bsv   — (batch, seq, vocab)
+      cache_blwh   — kv cache
+    """
+    fn = getattr(_local, "fn", None) or _default
+    return fn(x, name)
+
+
+@contextlib.contextmanager
+def activation_sharding(fn: Callable):
+    prev = getattr(_local, "fn", None)
+    _local.fn = fn
+    try:
+        yield
+    finally:
+        _local.fn = prev

@@ -1,0 +1,511 @@
+"""Model assembly for the 10 assigned architecture families.
+
+One init + one apply per family-block; ``init_params``/``forward`` dispatch
+on ``cfg.family``. Repeated blocks are stacked along a leading layer axis
+and executed with ``jax.lax.scan`` so the HLO stays O(1) in depth (95-100
+layer archs compile as fast as 2-layer ones).
+
+Modes:
+  train   — full-sequence causal (or enc-dec) teacher forcing -> logits
+  prefill — like train but also fills + returns the KV cache
+  decode  — one new token against a ring-buffer KV cache
+
+Cache layout (self-attention families): dict of stacked arrays with a
+leading layer axis, built by ``init_cache``; ring-buffer semantics support
+both full caches (W = seq_len) and sliding-window caches (W = window) for
+the long_500k shape (``long_context=True``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import scan_ctx
+from repro.models.sharding_hooks import constrain
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# block init / apply — shared decoder block (dense & moe & vlm-self)
+# --------------------------------------------------------------------------
+
+def _init_decoder_block(cfg, key, dtype, moe: bool = False):
+    ks = jax.random.split(key, 2)
+    p = {
+        "ln1": L.init_norm(cfg, dtype=dtype),
+        "attn": L.init_attention(cfg, ks[0], dtype),
+        "ln2": L.init_norm(cfg, dtype=dtype),
+    }
+    if moe:
+        p["moe"] = L.init_moe(cfg, ks[1], dtype)
+    else:
+        p["mlp"] = L.init_mlp(cfg, ks[1], dtype)
+    if cfg.post_norm:
+        p["ln1_post"] = L.init_norm(cfg, dtype=dtype)
+        p["ln2_post"] = L.init_norm(cfg, dtype=dtype)
+    return p
+
+
+def _decoder_block(cfg, p, x, q_pos, *, window, cache=None):
+    h, new_cache = L.attention_block(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                                     q_pos, window=window, cache=cache)
+    if cfg.post_norm:
+        h = L.apply_norm(cfg, p["ln1_post"], h)
+    x = x + h
+    hin = L.apply_norm(cfg, p["ln2"], x)
+    if "moe" in p:
+        h, aux = L.moe_apply(cfg, p["moe"], hin)
+    else:
+        h, aux = L.mlp_block(cfg, p["mlp"], hin), 0.0
+    if cfg.post_norm:
+        h = L.apply_norm(cfg, p["ln2_post"], h)
+    x = x + h
+    x = constrain(x, "tokens_bsd")
+    return x, new_cache, aux
+
+
+def _init_cross_block(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_norm(cfg, dtype=dtype),
+        "xattn": L.init_attention(cfg, ks[0], dtype, cross=True),
+        "ln2": L.init_norm(cfg, dtype=dtype),
+        "mlp": L.init_mlp(cfg, ks[1], dtype),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def _cross_block(cfg, p, x, q_pos, ctx):
+    """Gated cross-attention block (llama-3.2-vision / enc-dec decoder)."""
+    h, _ = L.attention_block(cfg, p["xattn"], L.apply_norm(cfg, p["ln1"], x),
+                             q_pos, kv_src=ctx, use_rope=False)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * h
+    h = L.mlp_block(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * h
+    return x
+
+
+def _init_encoder_block(cfg, key, dtype):
+    return _init_decoder_block(cfg, key, dtype, moe=False)
+
+
+def _encoder_block(cfg, p, x, pos):
+    h, _ = L.attention_block(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                             pos, causal=False)
+    x = x + h
+    x = x + L.mlp_block(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+    return x
+
+
+def _init_rwkv_block(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_layernorm(cfg.d_model, dtype),
+        "tmix": L.init_rwkv_tmix(cfg, ks[0], dtype),
+        "ln2": L.init_layernorm(cfg.d_model, dtype),
+        "cmix": L.init_rwkv_cmix(cfg, ks[1], dtype),
+    }
+
+
+def _init_hymba_block(cfg, key, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg, dtype=dtype),
+        "attn": L.init_attention(cfg, ks[0], dtype),
+        "ssm": L.init_ssm(cfg, ks[1], dtype),
+        "norm_attn": L.init_rmsnorm(cfg.d_model, dtype),
+        "norm_ssm": L.init_rmsnorm(cfg.d_model, dtype),
+        "ln2": L.init_norm(cfg, dtype=dtype),
+        "mlp": L.init_mlp(cfg, ks[2], dtype),
+    }
+
+
+def _hymba_block(cfg, p, x, q_pos, *, window, cache=None, ssm_state=None,
+                 conv_state=None):
+    """Parallel attention + SSM heads, mean-fused (Hymba)."""
+    xn = L.apply_norm(cfg, p["ln1"], x)
+    ha, new_cache = L.attention_block(cfg, p["attn"], xn, q_pos,
+                                      window=window, cache=cache)
+    hs, (new_ssm, new_conv) = L.ssm_block(cfg, p["ssm"], xn,
+                                          state=ssm_state, conv_state=conv_state)
+    h = 0.5 * (L.rmsnorm(p["norm_attn"], ha) + L.rmsnorm(p["norm_ssm"], hs))
+    x = x + h
+    x = x + L.mlp_block(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+    x = constrain(x, "tokens_bsd")
+    return x, new_cache, new_ssm, new_conv
+
+
+# --------------------------------------------------------------------------
+# stacked init
+# --------------------------------------------------------------------------
+
+def _stack(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg, key, dtype=jnp.float32) -> Params:
+    """Build the full parameter pytree for any supported family."""
+    if cfg.family == "resnet":
+        from repro.models.resnet import init_resnet
+        return init_resnet(cfg, key, dtype)
+
+    kE, kB, kO, kX = jax.random.split(key, 4)
+    V, d = cfg.padded_vocab, cfg.d_model
+    p: dict = {
+        "embed": L.normal_init(kE, (V, d), 0.02, dtype),
+        "final_norm": L.init_norm(cfg, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.normal_init(kO, (d, V), 1 / math.sqrt(d), dtype)
+
+    fam = cfg.family
+    if fam == "dense":
+        p["blocks"] = _stack(lambda k: _init_decoder_block(cfg, k, dtype),
+                             kB, cfg.n_layers)
+    elif fam == "moe":
+        n_dense = cfg.moe_first_dense_layers
+        if n_dense:
+            kD, kB = jax.random.split(kB)
+            p["dense_blocks"] = _stack(
+                lambda k: _init_decoder_block(cfg, k, dtype, moe=False), kD, n_dense)
+        p["blocks"] = _stack(lambda k: _init_decoder_block(cfg, k, dtype, moe=True),
+                             kB, cfg.n_layers - n_dense)
+    elif fam == "ssm":
+        p["blocks"] = _stack(lambda k: _init_rwkv_block(cfg, k, dtype),
+                             kB, cfg.n_layers)
+    elif fam == "hybrid":
+        p["blocks"] = _stack(lambda k: _init_hymba_block(cfg, k, dtype),
+                             kB, cfg.n_layers)
+    elif fam == "vlm":
+        per = cfg.cross_attn_period
+        n_super = cfg.n_layers // per
+        n_self = per - 1
+        p["blocks"] = _stack(
+            lambda k: jax.vmap(lambda kk: _init_decoder_block(cfg, kk, dtype))(
+                jax.random.split(k, n_self)), kB, n_super)
+        p["cross_blocks"] = _stack(lambda k: _init_cross_block(cfg, k, dtype),
+                                   kX, n_super)
+        p["vision_proj"] = L.fan_in_init(jax.random.fold_in(kX, 1),
+                                         (cfg.d_vision, d), dtype)
+    elif fam == "audio":
+        p["enc_blocks"] = _stack(lambda k: _init_encoder_block(cfg, k, dtype),
+                                 kX, cfg.n_encoder_layers)
+        p["blocks"] = _stack(lambda k: _init_decoder_block(cfg, k, dtype),
+                             kB, cfg.n_layers)
+        p["cross_blocks"] = _stack(
+            lambda k: _init_cross_block(cfg, k, dtype),
+            jax.random.fold_in(kX, 1), cfg.n_layers)
+        p["audio_adapter"] = L.fan_in_init(jax.random.fold_in(kX, 2),
+                                           (cfg.d_audio, d), dtype)
+        p["enc_norm"] = L.init_norm(cfg, dtype=dtype)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# --------------------------------------------------------------------------
+# per-layer attention windows / cache geometry
+# --------------------------------------------------------------------------
+
+def layer_windows(cfg, n_layers: int, long_context: bool):
+    """(n_layers,) int32 per-layer attention window (BIG_WINDOW = none)."""
+    big = L.BIG_WINDOW
+    glob = cfg.long_context_window if long_context else big
+    if cfg.local_global_period:
+        idx = jnp.arange(n_layers)
+        local = (idx % cfg.local_global_period) == 0
+        return jnp.where(local, cfg.sliding_window, glob).astype(jnp.int32)
+    w = cfg.sliding_window if cfg.sliding_window else glob
+    return jnp.full((n_layers,), w, jnp.int32)
+
+
+def cache_width(cfg, seq_len: int, long_context: bool) -> int:
+    """Ring-buffer width for decode caches."""
+    if long_context:
+        if cfg.long_context_mode == "native" and cfg.sliding_window:
+            return min(seq_len, cfg.sliding_window)   # hymba attn branch
+        return min(seq_len, cfg.long_context_window)
+    if cfg.sliding_window and not cfg.local_global_period:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16, *,
+               long_context: bool = False, ctx_len: int = 0) -> dict:
+    """Empty decode cache. seq_len = max absolute position to be served."""
+    fam = cfg.family
+    W = cache_width(cfg, seq_len, long_context)
+    d = cfg.d_model
+    if fam == "ssm":
+        H = d // cfg.rwkv_head_dim
+        D = cfg.rwkv_head_dim
+        return {
+            "state": jnp.zeros((cfg.n_layers, batch, H, D, D), jnp.float32),
+            "x_last_t": jnp.zeros((cfg.n_layers, batch, d), dtype),
+            "x_last_c": jnp.zeros((cfg.n_layers, batch, d), dtype),
+        }
+    if fam == "hybrid":
+        di = cfg.ssm_expand * d
+        return {
+            "kv": L.make_cache(cfg, batch, W, dtype, n_layers=cfg.n_layers),
+            "ssm": jnp.zeros((cfg.n_layers, batch, di, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, 3, di), dtype),
+        }
+    if fam == "vlm":
+        per = cfg.cross_attn_period
+        n_super = cfg.n_layers // per
+        return {
+            "kv": L.make_cache(cfg, batch, W, dtype,
+                               n_layers=n_super * (per - 1)),
+            "ctx": jnp.zeros((batch, cfg.n_vision_tokens, d), dtype),
+        }
+    if fam == "audio":
+        return {
+            "kv": L.make_cache(cfg, batch, W, dtype, n_layers=cfg.n_layers),
+            "ctx": jnp.zeros((batch, ctx_len, d), dtype),
+        }
+    n_dense = cfg.moe_first_dense_layers if fam == "moe" else 0
+    c = {"kv": L.make_cache(cfg, batch, W, dtype, n_layers=cfg.n_layers - n_dense)}
+    if n_dense:
+        c["kv_dense"] = L.make_cache(cfg, batch, W, dtype, n_layers=n_dense)
+    return c
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _embed(cfg, p, tokens):
+    x = p["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _head(cfg, p, x):
+    x = L.apply_norm(cfg, p["final_norm"], x)
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(logits / cfg.final_logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, L.NEG_INF)
+    return constrain(logits, "logits_bsv")
+
+
+def _scan_blocks(body, carry, *xs):
+    def f(c, inp):
+        return body(c, *inp)
+
+    length = jax.tree.leaves(xs[0])[0].shape[0]
+    return jax.lax.scan(f, carry, xs,
+                        unroll=scan_ctx.resolve("layers", length))
+
+
+def _forward_hidden(cfg, p, tokens, *, mode, cache, positions, aux_inputs,
+                    long_context):
+    """Backbone: embeddings -> blocks. Returns (hidden, new_cache, aux)."""
+    B, S = tokens.shape
+    fam = cfg.family
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    elif positions.ndim == 1:
+        positions = positions[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+
+    x = _embed(cfg, p, tokens)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if fam in ("dense", "moe"):
+        n_dense = cfg.moe_first_dense_layers if fam == "moe" else 0
+
+        def body(carry, blk, win, kv=None):
+            xx, aux = carry
+            xx, new_kv, a = _decoder_block(cfg, blk, xx, positions,
+                                           window=win, cache=kv)
+            return (xx, aux + a), new_kv
+
+        new_cache = {} if cache is not None else None
+        if n_dense:
+            dwins = layer_windows(cfg, n_dense, long_context)
+            if cache is not None:
+                (x, aux_total), ndkv = _scan_blocks(
+                    lambda c, blk, w, kv: body(c, blk, w, kv),
+                    (x, aux_total), p["dense_blocks"], dwins, cache["kv_dense"])
+                new_cache["kv_dense"] = ndkv
+            else:
+                (x, aux_total), _ = _scan_blocks(
+                    lambda c, blk, w: body(c, blk, w),
+                    (x, aux_total), p["dense_blocks"], dwins)
+        wins = layer_windows(cfg, cfg.n_layers - n_dense, long_context)
+        if cache is not None:
+            (x, aux_total), nkv = _scan_blocks(
+                lambda c, blk, w, kv: body(c, blk, w, kv),
+                (x, aux_total), p["blocks"], wins, cache["kv"])
+            new_cache["kv"] = nkv
+        else:
+            (x, aux_total), _ = _scan_blocks(
+                lambda c, blk, w: body(c, blk, w),
+                (x, aux_total), p["blocks"], wins)
+
+    elif fam == "ssm":
+        def body(xx, blk, st=None):
+            xn = L.layernorm(blk["ln1"], xx)
+            if mode == "decode":
+                o, s_new, xl_t = L.rwkv_tmix_step(cfg, blk["tmix"], xn,
+                                                  st["state"], st["x_last_t"])
+            else:
+                o, s_new, xl_t = L.rwkv_tmix_chunked(
+                    cfg, blk["tmix"], xn,
+                    state=st["state"] if st is not None else None,
+                    x_last=st["x_last_t"] if st is not None else None)
+            xx = xx + o
+            xn2 = L.layernorm(blk["ln2"], xx)
+            o2, xl_c = L.rwkv_cmix(cfg, blk["cmix"], xn2,
+                                   x_last=st["x_last_c"] if st is not None else None)
+            xx = xx + o2
+            xx = constrain(xx, "tokens_bsd")
+            return xx, {"state": s_new, "x_last_t": xl_t, "x_last_c": xl_c}
+
+        if cache is not None:
+            x, new_cache = _scan_blocks(lambda c, blk, st: body(c, blk, st),
+                                        x, p["blocks"], cache)
+        else:
+            x, states = _scan_blocks(lambda c, blk: body(c, blk), x, p["blocks"])
+            new_cache = states if mode == "prefill" else None
+
+    elif fam == "hybrid":
+        wins = layer_windows(cfg, cfg.n_layers, long_context)
+
+        def body(xx, blk, win, st=None):
+            xx, nkv, nssm, nconv = _hymba_block(
+                cfg, blk, xx, positions, window=win,
+                cache=st["kv"] if st is not None else None,
+                ssm_state=st["ssm"] if st is not None else None,
+                conv_state=st["conv"] if st is not None else None)
+            out_st = {"kv": nkv, "ssm": nssm, "conv": nconv}
+            return xx, out_st
+
+        if cache is not None:
+            x, new_cache = _scan_blocks(lambda c, blk, w, st: body(c, blk, w, st),
+                                        x, p["blocks"], wins, cache)
+        else:
+            x, states = _scan_blocks(lambda c, blk, w: body(c, blk, w),
+                                     x, p["blocks"], wins)
+            # train mode: attention ran cache-less -> states' kv is None
+            new_cache = None
+            if mode == "prefill":
+                raise ValueError("hybrid prefill requires a cache "
+                                 "(init_cache) so the kv ring fills")
+
+    elif fam == "vlm":
+        if aux_inputs is not None:
+            ctx = aux_inputs["patches"].astype(x.dtype) @ p["vision_proj"]
+        else:
+            ctx = cache["ctx"]
+        per = cfg.cross_attn_period
+        n_super = cfg.n_layers // per
+        n_self = per - 1
+        vwin = cfg.long_context_window if long_context else L.BIG_WINDOW
+
+        def body(carry, blks, xblk, kv=None):
+            xx, aux = carry
+
+            def inner(c2, blk, kv_i=None):
+                x2, a2 = c2
+                x2, nkv, a = _decoder_block(cfg, blk, x2, positions,
+                                            window=vwin, cache=kv_i)
+                return (x2, a2 + a), nkv
+
+            if kv is not None:
+                (xx, aux), nkv = _scan_blocks(
+                    lambda c, blk, kv_i: inner(c, blk, kv_i), (xx, aux), blks, kv)
+            else:
+                (xx, aux), nkv = _scan_blocks(
+                    lambda c, blk: inner(c, blk), (xx, aux), blks)
+            xx = _cross_block(cfg, xblk, xx, positions, ctx)
+            return (xx, aux), nkv
+
+        if cache is not None:
+            kv_nested = jax.tree.map(
+                lambda a: a.reshape((n_super, n_self) + a.shape[1:]), cache["kv"])
+            (x, aux_total), nkv = _scan_blocks(
+                lambda c, blks, xblk, kv: body(c, blks, xblk, kv),
+                (x, aux_total), p["blocks"], p["cross_blocks"], kv_nested)
+            new_kv = jax.tree.map(
+                lambda a: a.reshape((n_super * n_self,) + a.shape[2:]), nkv)
+            new_cache = {"kv": new_kv, "ctx": ctx}
+        else:
+            (x, aux_total), _ = _scan_blocks(
+                lambda c, blks, xblk: body(c, blks, xblk),
+                (x, aux_total), p["blocks"], p["cross_blocks"])
+            new_cache = None
+
+    elif fam == "audio":
+        if aux_inputs is not None:
+            frames = aux_inputs["frames"].astype(x.dtype) @ p["audio_adapter"]
+            Te = frames.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32), (B, Te))
+            enc_out, _ = _scan_blocks(
+                lambda c, blk: (_encoder_block(cfg, blk, c, enc_pos), None),
+                frames, p["enc_blocks"])
+            ctx = L.apply_norm(cfg, p["enc_norm"], enc_out)
+        else:
+            ctx = cache["ctx"]
+        awin = cfg.long_context_window if long_context else L.BIG_WINDOW
+
+        def body(carry, blk, xblk, kv=None):
+            xx, aux = carry
+            xx, nkv, a = _decoder_block(cfg, blk, xx, positions,
+                                        window=awin, cache=kv)
+            xx = _cross_block(cfg, xblk, xx, positions, ctx)
+            return (xx, aux + a), nkv
+
+        if cache is not None:
+            (x, aux_total), nkv = _scan_blocks(
+                lambda c, blk, xblk, kv: body(c, blk, xblk, kv),
+                (x, aux_total), p["blocks"], p["cross_blocks"], cache["kv"])
+            new_cache = {"kv": nkv, "ctx": ctx}
+        else:
+            (x, aux_total), _ = _scan_blocks(
+                lambda c, blk, xblk: body(c, blk, xblk),
+                (x, aux_total), p["blocks"], p["cross_blocks"])
+            new_cache = None
+    else:
+        raise ValueError(fam)
+
+    return x, new_cache, aux_total
+
+
+def forward(cfg, p, tokens, *, mode: str = "train", cache=None,
+            positions=None, aux_inputs=None, long_context: bool = False):
+    """Unified forward. Returns (logits_f32, new_cache, aux_losses).
+
+    tokens: (B, S) int32. decode: S == 1 and ``positions`` is (B,) absolute.
+    """
+    x, new_cache, aux = _forward_hidden(
+        cfg, p, tokens, mode=mode, cache=cache, positions=positions,
+        aux_inputs=aux_inputs, long_context=long_context)
+    return _head(cfg, p, x), new_cache, aux
+
+
+def forward_features(cfg, p, tokens, *, aux_inputs=None):
+    """Mean-pooled, L2-normalized final hidden state — the representation
+    fed to the dual-temperature SSL loss for token architectures."""
+    x, _, aux = _forward_hidden(cfg, p, tokens, mode="train", cache=None,
+                                positions=None, aux_inputs=aux_inputs,
+                                long_context=False)
+    x = L.apply_norm(cfg, p["final_norm"], x)
+    f = x.mean(axis=1).astype(jnp.float32)
+    f = f / jnp.maximum(jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-8)
+    return f, aux

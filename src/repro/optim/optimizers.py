@@ -1,0 +1,97 @@
+"""Pytree optimizers + LR schedules (no optax in this container).
+
+Each optimizer is (init, update) over arbitrary parameter pytrees:
+    state = init(params)
+    params, state = update(params, grads, state, lr)
+
+The paper trains with SGD(momentum=0.9, weight_decay=5e-4) under a
+cosine-annealed lr starting at 0.9 (Table 1). AdamW is provided for the
+token-architecture training paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: object
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 5e-4, nesterov: bool = False):
+    def init(params):
+        return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def update(params, grads, state, lr):
+        def upd(p, g, m):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m.astype(jnp.float32) + g
+            step = (g + momentum * m_new) if nesterov else m_new
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), \
+                m_new.astype(m.dtype)
+
+        out = jax.tree.map(upd, params, grads, state.momentum)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, SGDState(momentum=new_m)
+
+    return init, update
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1):
+    def init(params):
+        return AdamWState(mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                          nu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(params, grads, state, lr):
+        c = state.count + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu_n = b1 * mu + (1 - b1) * g
+            nu_n = b2 * nu + (1 - b2) * g * g
+            step = (mu_n / bc1) / (jnp.sqrt(nu_n / bc2) + eps)
+            p_new = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), mu_n, nu_n
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        leaf = lambda t: isinstance(t, tuple)
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+                AdamWState(mu=jax.tree.map(lambda t: t[1], out, is_leaf=leaf),
+                           nu=jax.tree.map(lambda t: t[2], out, is_leaf=leaf),
+                           count=c))
+
+    return init, update
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, total_steps: int, min_lr: float = 0.0,
+                    warmup: int = 0) -> Callable:
+    """Cosine annealing (paper Sec. 5.1: lr 0.9 annealed over training)."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos) if warmup else cos
+    return lr
+
+
+def constant_schedule(base_lr: float) -> Callable:
+    return lambda step: jnp.asarray(base_lr, jnp.float32)

@@ -1,0 +1,115 @@
+"""Aggregation schemes (Eq. 11 + baselines): unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as stst
+
+from repro.core.aggregation import (aggregate_discard, aggregate_fedavg,
+                                    aggregate_flsimco, flsimco_weights)
+
+
+def _trees(key, n, shapes=((4, 3), (7,))):
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        out.append({"a": jax.random.normal(k, shapes[0]),
+                    "b": {"c": jax.random.normal(jax.random.fold_in(k, 1),
+                                                 shapes[1])}})
+    return out
+
+
+@settings(max_examples=50, deadline=None)
+@given(levels=stst.lists(stst.floats(0.1, 50.0), min_size=2, max_size=16))
+def test_flsimco_weights_normalized_and_ordered(levels):
+    w = np.asarray(flsimco_weights(jnp.array(levels)))
+    assert np.isclose(w.sum(), 1.0, atol=1e-5)
+    assert (w >= -1e-7).all()
+    # monotonicity: more blur -> strictly less weight (ties allowed)
+    order_l = np.argsort(levels)
+    assert (np.diff(w[order_l]) <= 1e-7).all()
+
+
+def test_literal_eq11_weights_sum_to_n_minus_1():
+    """DESIGN.md deviation #2: the unnormalized Eq. 11 weights sum to N-1."""
+    L = jnp.array([1.0, 2.0, 3.0, 4.0])
+    w = flsimco_weights(L, normalize=False)
+    np.testing.assert_allclose(float(w.sum()), 3.0, rtol=1e-6)
+
+
+def test_aggregate_identical_trees_is_identity():
+    key = jax.random.PRNGKey(0)
+    t = _trees(key, 1)[0]
+    trees = [t] * 5
+    out = aggregate_flsimco(trees, jnp.array([1.0, 2, 3, 4, 5]))
+    for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def test_fedavg_equals_flsimco_with_equal_blur():
+    key = jax.random.PRNGKey(1)
+    trees = _trees(key, 4)
+    fa = aggregate_fedavg(trees)
+    fs = aggregate_flsimco(trees, jnp.ones(4) * 2.5)
+    for l1, l2 in zip(jax.tree.leaves(fa), jax.tree.leaves(fs)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def test_discard_drops_fast_vehicles():
+    key = jax.random.PRNGKey(2)
+    trees = _trees(key, 3)
+    v = jnp.array([10.0, 50.0, 20.0])        # threshold 27.78: drop idx 1
+    out = aggregate_discard(trees, v, threshold=27.78)
+    expected = aggregate_fedavg([trees[0], trees[2]])
+    for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def test_discard_all_fast_falls_back_to_fedavg():
+    key = jax.random.PRNGKey(3)
+    trees = _trees(key, 3)
+    out = aggregate_discard(trees, jnp.array([90.0, 80.0, 70.0]), 27.78)
+    expected = aggregate_fedavg(trees)
+    for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=stst.integers(0, 2**31 - 1),
+       levels=stst.lists(stst.floats(0.5, 30.0), min_size=2, max_size=6))
+def test_aggregation_is_convex_combination(seed, levels):
+    """Aggregated leaf values lie inside the per-client min/max envelope."""
+    key = jax.random.PRNGKey(seed)
+    trees = _trees(key, len(levels))
+    out = aggregate_flsimco(trees, jnp.array(levels))
+    stacked = [np.stack([np.asarray(l) for l in ls])
+               for ls in zip(*[jax.tree.leaves(t) for t in trees])]
+    for l_out, l_all in zip(jax.tree.leaves(out), stacked):
+        assert (np.asarray(l_out) <= l_all.max(0) + 1e-5).all()
+        assert (np.asarray(l_out) >= l_all.min(0) - 1e-5).all()
+
+
+def test_beyond_paper_weightings_are_distributions():
+    from repro.core.aggregation import inverse_weights, softmax_weights
+    L = jnp.array([1.0, 5.0, 10.0, 20.0])
+    for w in (softmax_weights(L), inverse_weights(L)):
+        w = np.asarray(w)
+        assert np.isclose(w.sum(), 1.0, atol=1e-5)
+        assert (np.diff(w) <= 1e-7).all()   # more blur -> less weight
+    # softmax penalizes the fast outlier harder than the linear scheme
+    from repro.core.aggregation import flsimco_weights
+    lin = np.asarray(flsimco_weights(L))
+    sm = np.asarray(softmax_weights(L, temperature=2.0))
+    assert sm[-1] < lin[-1]
+
+
+def test_kernel_wagg_matches_tree_aggregation():
+    from repro.kernels.ops import wagg_tree
+    key = jax.random.PRNGKey(4)
+    trees = _trees(key, 5)
+    blur = jnp.array([1.0, 3.0, 2.0, 5.0, 4.0])
+    w = flsimco_weights(blur)
+    ref = aggregate_flsimco(trees, blur)
+    out = wagg_tree(trees, w)
+    for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)

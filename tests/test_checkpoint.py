@@ -1,0 +1,39 @@
+"""Checkpoint round-trip tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import latest, restore, save
+
+
+def test_roundtrip(tmp_path):
+    key = jax.random.PRNGKey(0)
+    tree = {"params": {"w": jax.random.normal(key, (4, 5)),
+                       "b": jnp.zeros((5,), jnp.bfloat16)},
+            "opt": [jnp.ones((3,)), {"count": jnp.int32(7)}]}
+    path = os.path.join(tmp_path, "ckpt_10.npz")
+    save(path, 10, tree)
+    step, restored = restore(path, tree)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_latest_pointer(tmp_path):
+    tree = {"x": jnp.arange(3)}
+    save(os.path.join(tmp_path, "c1.npz"), 1, tree)
+    save(os.path.join(tmp_path, "c2.npz"), 2, tree)
+    path, step = latest(str(tmp_path))
+    assert step == 2 and path.endswith("c2.npz")
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = {"x": jnp.zeros((3,))}
+    p = os.path.join(tmp_path, "c.npz")
+    save(p, 0, tree)
+    import pytest
+    with pytest.raises(ValueError):
+        restore(p, {"x": jnp.zeros((4,))})

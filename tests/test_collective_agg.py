@@ -1,0 +1,120 @@
+"""Mesh-level aggregation == host-level aggregation (DESIGN.md §2).
+
+Three equivalences that justify the production mapping:
+
+1. weighted psum over the federated axis (shard_map) == host
+   aggregate_flsimco over the same client trees.
+2. weighted-example-loss gradient == Eq.-11-weighted combination of
+   per-cohort gradients (the identity the pjit train_step relies on).
+3. one pjit train step with aggregation="flsimco" on a host mesh ==
+   explicit per-cohort SGD + host aggregation (local_iters=1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.aggregation import (aggregate_flsimco, flsimco_weights,
+                                    normalized_weight_on_axis,
+                                    weighted_psum_tree)
+
+N_DEV = jax.device_count()
+
+
+def test_weighted_psum_matches_host_aggregation():
+    """Stacked client trees on a 1-axis mesh: psum-based Eq. 11 ==
+    aggregate_flsimco. Runs on however many devices exist (1 on CI)."""
+    n = N_DEV
+    mesh = jax.make_mesh((n,), ("clients",))
+    key = jax.random.PRNGKey(0)
+    trees = [{"w": jax.random.normal(jax.random.fold_in(key, i), (4, 8)),
+              "b": jax.random.normal(jax.random.fold_in(key, 100 + i), (8,))}
+             for i in range(n)]
+    blur = jnp.arange(1.0, n + 1.0)
+
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+    def per_client(tree, L):
+        w = normalized_weight_on_axis(L[0], "clients")
+        agg = weighted_psum_tree(jax.tree.map(lambda x: x[0], tree), w,
+                                 "clients")
+        return agg
+
+    fn = shard_map(per_client, mesh=mesh,
+                   in_specs=(P("clients"), P("clients")),
+                   out_specs=P())
+    out = fn(stacked, blur)
+    expected = aggregate_flsimco(trees, blur)
+    for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def test_weighted_example_loss_grad_equals_weighted_cohort_grads():
+    """grad of sum_i w_i l_i(theta)  ==  sum_n w_n grad L_n(theta)."""
+    key = jax.random.PRNGKey(1)
+    d, n = 6, 4
+    theta = jax.random.normal(key, (d,))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    ys = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    blur = jnp.array([1.0, 4.0, 2.0, 3.0])
+    w = flsimco_weights(blur)
+
+    def per_example_loss(theta, x, y):
+        return (x @ theta - y) ** 2
+
+    # weighted-loss gradient (production pjit form)
+    g1 = jax.grad(lambda t: jnp.sum(
+        w * jax.vmap(per_example_loss, (None, 0, 0))(t, xs, ys)))(theta)
+    # per-cohort grads then Eq.-11 aggregation (paper's RSU form)
+    cohort_grads = [jax.grad(lambda t: per_example_loss(t, xs[i], ys[i]))(theta)
+                    for i in range(n)]
+    g2 = sum(float(w[i]) * cohort_grads[i] for i in range(n))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+def test_pjit_train_step_equals_host_federated_round():
+    """End-to-end: steps.make_train_step(aggregation='flsimco') on the host
+    mesh produces the same updated params as explicit per-cohort SGD +
+    host-level Eq. 11 aggregation (local_iters=1, no momentum carry)."""
+    import dataclasses
+    from repro.configs.base import get_config, InputShape
+    from repro.launch import steps as st
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    mesh = make_host_mesh()
+    B, S = 4, 16
+    shape = InputShape("test", S, B, "train")
+    lr = 0.1
+    fn, nm = st.make_train_step(cfg, shape, mesh, objective="lm", lr=lr,
+                                momentum=0.9, weight_decay=0.0,
+                                aggregation="flsimco", n_micro=1)
+    key = jax.random.PRNGKey(3)
+    from repro.models import transformer as T
+    params = T.init_params(cfg, key)
+    mom = st.init_momentum(params)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    blur = jnp.array([2.0, 8.0, 4.0, 6.0])
+    with jax.set_mesh(mesh):
+        new_p, _, metrics = jax.jit(fn)(params, mom, {"tokens": toks,
+                                                      "blur": blur})
+
+    # host-level: each example is a cohort; local SGD step then aggregate
+    w = flsimco_weights(blur)
+
+    def cohort_loss(p, tok):
+        logits, _, aux = T.forward(cfg, p, tok[None])
+        return st.lm_loss_per_example(cfg, logits, tok[None])[0] + aux
+
+    client_params = []
+    for i in range(B):
+        g = jax.grad(cohort_loss)(params, toks[i])
+        client_params.append(jax.tree.map(
+            lambda p, gg: p - lr * gg.astype(p.dtype), params, g))
+    # theta - lr * sum w_n g_n  ==  sum w_n (theta - lr g_n)
+    expected = aggregate_flsimco(client_params, blur)
+    for l1, l2 in zip(jax.tree.leaves(new_p), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=5e-4)

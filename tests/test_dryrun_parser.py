@@ -1,0 +1,80 @@
+"""HLO collective-byte parser + config-system utility tests.
+
+(Importing repro.launch.dryrun appends to XLA_FLAGS; jax is already
+initialized in the test process, so device count is unaffected.)
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_configs, pad_vocab
+
+
+FIXTURE_HLO = """
+HloModule jit_step
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = bf16[64,256]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[16,8,256]{2,1,0} all-to-all(%z), dimensions={0}
+  %cp = f32[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ard = f32[1024]{0} all-reduce-done(%ar)
+  %other = f32[10]{0} add(%a, %b)
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    from repro.launch.dryrun import collective_bytes
+    out = collective_bytes(FIXTURE_HLO)
+    assert out["all-gather"] == 2048 * 256 * 2
+    assert out["all-reduce"] == 1024 * 4
+    assert out["reduce-scatter"] == 64 * 256 * 2
+    assert out["all-to-all"] == 16 * 8 * 256 * 2
+    assert out["collective-permute"] == 32 * 32 * 4
+    assert out["count_all-gather"] == 1
+    # "-done" ops must not be double counted
+    assert out["count_all-reduce"] == 1
+
+
+def test_collective_bytes_empty_on_plain_hlo():
+    from repro.launch.dryrun import collective_bytes
+    assert collective_bytes("%x = f32[8]{0} add(%a, %b)") == {}
+
+
+def test_pad_vocab_multiples():
+    assert pad_vocab(32000) == 32768
+    assert pad_vocab(256206) % 2048 == 0
+    assert pad_vocab(2048) == 2048
+
+
+def test_registry_has_all_assigned_archs():
+    expected = {"tinyllama-1.1b", "seamless-m4t-large-v2", "rwkv6-1.6b",
+                "hymba-1.5b", "gemma2-27b", "kimi-k2-1t-a32b",
+                "llama-3.2-vision-90b", "olmoe-1b-7b", "qwen2-0.5b",
+                "deepseek-67b", "resnet18-cifar"}
+    assert expected == set(list_configs())
+
+
+def test_smoke_suffix_resolves():
+    r = get_config("gemma2-27b-smoke")
+    assert r.n_layers == 2 and r.d_model <= 256
+
+
+def test_input_shapes_match_assignment():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+    assert s["decode_32k"].kind == "decode" and s["long_500k"].kind == "decode"
+
+
+def test_n_params_sane_across_zoo():
+    """Named sizes should be within ~35% of the advertised parameter
+    counts (vocab padding + per-arch detail differences allowed)."""
+    expect = {"tinyllama-1.1b": 1.1e9, "qwen2-0.5b": 0.5e9,
+              "gemma2-27b": 27e9, "deepseek-67b": 67e9,
+              "rwkv6-1.6b": 1.6e9, "hymba-1.5b": 1.5e9,
+              "olmoe-1b-7b": 7e9}
+    for name, n in expect.items():
+        got = get_config(name).n_params()
+        assert 0.6 * n < got < 1.6 * n, (name, got, n)

@@ -1,0 +1,107 @@
+"""Dual-temperature loss (Eq. 6-8): unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as stst
+
+from repro.core.dt_loss import (_dt_from_logits, dt_loss, dt_loss_matrix,
+                                info_nce_loss)
+
+
+def _unit(key, b, d):
+    x = jax.random.normal(key, (b, d))
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def test_equal_temperatures_reduce_to_infonce():
+    """With tau_alpha == tau_beta the sg-weight is exactly 1, so the DT loss
+    equals plain InfoNCE over the same logits."""
+    key = jax.random.PRNGKey(0)
+    q = _unit(key, 16, 32)
+    k = _unit(jax.random.fold_in(key, 1), 16, 32)
+    tau = 0.2
+    dt = dt_loss_matrix(q, k, tau, tau)
+    sim = q @ k.T / tau
+    ce = -jnp.diagonal(jax.nn.log_softmax(sim, axis=-1)).mean()
+    np.testing.assert_allclose(float(dt), float(ce), rtol=1e-5)
+
+
+def test_weight_is_stop_gradient():
+    """Gradients must flow only through the log-softmax term: gradient of
+    dt at (tau_a, tau_b) with the weight detached equals gradient of
+    weight_const * log p_a."""
+    key = jax.random.PRNGKey(1)
+    q = _unit(key, 8, 16)
+    k = _unit(jax.random.fold_in(key, 2), 8, 16)
+
+    g1 = jax.grad(lambda q: dt_loss_matrix(q, k, 0.1, 1.0))(q)
+
+    def manual(qv):
+        sim = qv @ k.T
+        pos = jnp.diagonal(sim)
+        log_pa = pos / 0.1 - jax.nn.logsumexp(sim / 0.1, axis=-1)
+        w_a = 1 - jnp.exp(log_pa)
+        w_b = 1 - jnp.exp(pos / 1.0 - jax.nn.logsumexp(sim / 1.0, axis=-1))
+        w = jax.lax.stop_gradient(w_b / jnp.maximum(w_a, 1e-8))
+        return (-w * log_pa).mean()
+
+    g2 = jax.grad(manual)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+
+
+def test_perfect_alignment_gives_small_loss():
+    """If q == k (positives trivially best), loss should be much smaller
+    than for random pairs."""
+    key = jax.random.PRNGKey(2)
+    q = _unit(key, 32, 64)
+    aligned = dt_loss_matrix(q, q, 0.1, 1.0)
+    k = _unit(jax.random.fold_in(key, 3), 32, 64)
+    random_ = dt_loss_matrix(q, k, 0.1, 1.0)
+    assert float(aligned) < float(random_)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=stst.integers(2, 24), d=stst.integers(4, 64),
+       seed=stst.integers(0, 2**31 - 1))
+def test_loss_finite_and_nonnegative_weighting(b, d, seed):
+    key = jax.random.PRNGKey(seed)
+    q = _unit(key, b, d)
+    k = _unit(jax.random.fold_in(key, 1), b, d)
+    loss = dt_loss_matrix(q, k, 0.1, 1.0)
+    assert np.isfinite(float(loss))
+    # per-anchor weights w_b/w_a are positive => each -w*logp >= 0 whenever
+    # p_pos <= 1 (log p <= 0), so the mean is nonnegative
+    assert float(loss) >= 0.0
+
+
+def test_explicit_negatives_form_matches_matrix_form():
+    """dt_loss with k_neg = all k's (incl. the positive column duplicated)
+    differs from matrix form; but with k_neg = k and pos prepended the
+    logits sets coincide up to the duplicate positive — check the
+    construction agrees on a hand-built case."""
+    key = jax.random.PRNGKey(4)
+    q = _unit(key, 6, 8)
+    k = _unit(jax.random.fold_in(key, 5), 6, 8)
+    # matrix form == explicit form using per-anchor negatives k_j (j != i)
+    # build explicitly per anchor
+    losses = []
+    for i in range(6):
+        negs = jnp.delete(k, i, axis=0)
+        pos = jnp.sum(q[i] * k[i])[None, None]
+        neg = (q[i:i + 1] @ negs.T)
+        logits = jnp.concatenate([pos, neg], axis=-1)
+        li = _dt_from_logits(logits, jnp.zeros((1,), jnp.int32), 0.1, 1.0)
+        losses.append(float(li[0]))
+    manual = np.mean(losses)
+    mat = float(dt_loss_matrix(q, k, 0.1, 1.0))
+    np.testing.assert_allclose(mat, manual, rtol=1e-5)
+
+
+def test_info_nce_decreases_with_better_positives():
+    key = jax.random.PRNGKey(6)
+    q = _unit(key, 16, 32)
+    queue = _unit(jax.random.fold_in(key, 7), 64, 32)
+    good = info_nce_loss(q, q, queue)
+    bad = info_nce_loss(q, _unit(jax.random.fold_in(key, 8), 16, 32), queue)
+    assert float(good) < float(bad)

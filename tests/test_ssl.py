@@ -1,0 +1,71 @@
+"""SSL augmentation + MoCo machinery tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ssl
+
+
+def test_pi1_pi2_preserve_shape_and_range():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (8, 16, 16, 3))
+    v1 = ssl.pi1(jax.random.fold_in(key, 1), x)
+    v2 = ssl.pi2(jax.random.fold_in(key, 2), x)
+    assert v1.shape == x.shape and v2.shape == x.shape
+    assert float(v2.min()) >= 0.0 and float(v2.max()) <= 1.0
+    assert bool(jnp.isfinite(v1).all() and jnp.isfinite(v2).all())
+
+
+def test_views_differ_from_original_and_each_other():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.uniform(key, (16, 8, 8, 3))
+    v1 = ssl.pi1(jax.random.fold_in(key, 1), x)
+    v2 = ssl.pi2(jax.random.fold_in(key, 2), x)
+    assert not np.allclose(np.asarray(v1), np.asarray(v2))
+
+
+def test_grayscale_makes_channels_equal():
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, 4, 4, 3))
+    g = ssl._grayscale(x)
+    np.testing.assert_allclose(np.asarray(g[..., 0]), np.asarray(g[..., 1]))
+    np.testing.assert_allclose(np.asarray(g[..., 1]), np.asarray(g[..., 2]))
+
+
+def test_momentum_update_ema():
+    p = {"w": jnp.ones((3,))}
+    q = {"w": jnp.zeros((3,))}
+    out = ssl.momentum_update(p, q, m=0.9)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.9)
+
+
+def test_queue_push_ring_semantics():
+    key = jax.random.PRNGKey(3)
+    state = ssl.init_moco_state({}, queue_len=8, dim=4, key=key)
+    k1 = jnp.ones((5, 4))
+    state = ssl.queue_push(state, k1)
+    assert int(state.ptr) == 5
+    k2 = 2 * jnp.ones((5, 4))
+    state = ssl.queue_push(state, k2)          # wraps: 5..7 then 0..1
+    assert int(state.ptr) == 2
+    q = np.asarray(state.queue)
+    np.testing.assert_allclose(q[5:8], 2.0)
+    np.testing.assert_allclose(q[0:2], 2.0)
+    np.testing.assert_allclose(q[2:5], 1.0)
+
+
+def test_fedco_merge_truncates_to_queue_length():
+    gq = jnp.zeros((8, 4))
+    ks = [jnp.ones((3, 4)), 2 * jnp.ones((3, 4))]
+    out = ssl.fedco_merge_queues(gq, ks)
+    assert out.shape == (8, 4)
+    np.testing.assert_allclose(np.asarray(out[:3]), 1.0)
+    np.testing.assert_allclose(np.asarray(out[3:6]), 2.0)
+    np.testing.assert_allclose(np.asarray(out[6:]), 0.0)
+
+
+def test_token_view_masks_expected_fraction():
+    key = jax.random.PRNGKey(4)
+    toks = jnp.full((64, 128), 7, jnp.int32)
+    v = ssl.token_view(key, toks, mask_id=0, drop_p=0.25)
+    frac = float((v == 0).mean())
+    assert 0.15 < frac < 0.35

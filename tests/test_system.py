@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full FLSimCo pipeline at miniature scale: synthetic data -> federated
+DT-SSL pre-training -> kNN probe, plus the launch-layer train/serve steps
+on the host mesh for a reduced architecture.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES, InputShape, get_config
+from repro.core.federation import FLConfig, FederatedTrainer
+from repro.data.synthetic import make_dataset, partition_dirichlet
+from repro.eval.probe import encode, knn_top1
+from repro.launch import steps as st
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.models.resnet import init_resnet
+
+
+@pytest.mark.slow
+def test_flsimco_pipeline_learns_representations():
+    """A few FLSimCo rounds must beat a random encoder on the kNN probe."""
+    x, y = make_dataset(n_per_class=80, seed=0)
+    split = int(0.8 * len(x))
+    xtr, ytr, xte, yte = x[:split], y[:split], x[split:], y[split:]
+    parts = partition_dirichlet(ytr, 6, alpha=1.0, min_per_client=30, seed=0)
+    tree0 = init_resnet(get_config("resnet18-cifar"), jax.random.PRNGKey(0))
+
+    f_tr0 = encode(tree0, xtr[:400])
+    f_te0 = encode(tree0, xte[:200])
+    acc0 = knn_top1(f_tr0, ytr[:400], f_te0, yte[:200])
+
+    cfg = FLConfig(n_vehicles=6, vehicles_per_round=3, batch_size=64,
+                   rounds=8, local_iters=1, lr=0.2, seed=0)
+    tr = FederatedTrainer(cfg, tree0, [xtr[p] for p in parts])
+    tr.run(log_every=0)
+
+    f_tr = encode(tr.global_tree, xtr[:400])
+    f_te = encode(tr.global_tree, xte[:200])
+    acc1 = knn_top1(f_tr, ytr[:400], f_te, yte[:200])
+    # random-encoder kNN on this dataset is already decent; training must
+    # not destroy it and should typically improve it
+    assert acc1 > acc0 - 0.05
+    assert acc1 > 1.5 / 10  # far above chance
+
+
+def test_launch_train_step_runs_on_host_mesh():
+    cfg = get_config("olmoe-1b-7b").reduced()
+    mesh = make_host_mesh()
+    shape = InputShape("t", 32, 4, "train")
+    fn, nm = st.make_train_step(cfg, shape, mesh, objective="lm", n_micro=2)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    mom = st.init_momentum(params)
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
+             "blur": jnp.array([1.0, 2.0, 3.0, 4.0])}
+    with jax.set_mesh(mesh):
+        p2, m2, metrics = jax.jit(fn)(params, mom, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    delta = sum(float(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)).sum())
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+def test_launch_serve_steps_roundtrip_host_mesh():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    mesh = make_host_mesh()
+    B, S = 2, 32
+    shape = InputShape("p", S, B, "prefill")
+    prefill = st.make_prefill_step(cfg, shape, mesh, param_dtype=jnp.float32)
+    decode = st.make_decode_step(cfg, InputShape("d", S, B, "decode"), mesh)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    with jax.set_mesh(mesh):
+        last, cache = jax.jit(prefill)(params, {"tokens": toks[:, :-1]})
+        logits, cache = jax.jit(decode)(
+            params, {"tokens": toks[:, -1:],
+                     "positions": jnp.full((B,), S - 1, jnp.int32),
+                     "cache": cache})
+    full, _, _ = T.forward(cfg, params, toks)
+    np.testing.assert_allclose(np.asarray(logits[:, :cfg.vocab_size]),
+                               np.asarray(full[:, -1, :cfg.vocab_size]),
+                               atol=2e-3)
+
+
+def test_dt_objective_train_step():
+    """The paper's DT objective wired through the launch train step."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    mesh = make_host_mesh()
+    shape = InputShape("t", 32, 4, "train")
+    fn, _ = st.make_train_step(cfg, shape, mesh, objective="dt", n_micro=1)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    mom = st.init_momentum(params)
+    key = jax.random.PRNGKey(2)
+    batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
+             "blur": jnp.ones((4,))}
+    with jax.set_mesh(mesh):
+        p2, _, metrics = jax.jit(fn)(params, mom, batch)
+    assert np.isfinite(float(metrics["loss"]))
