@@ -1,0 +1,101 @@
+"""Multi-RSU scaling benchmark: round latency over (vehicles x RSUs).
+
+Sweeps the topology layer end to end — per-RSU vmapped cohorts, two-level
+Eq.-11 aggregation, and (for the handover grid) position advancement and
+stale-upload reweighting — and reports us/round after a warmup round.
+Also times the host aggregation step alone under both weighted-sum
+backends (tree-map vs the fused wagg kernel in interpret mode) so the
+crossover is visible off-TPU.
+
+  PYTHONPATH=src python benchmarks/multi_rsu.py [--rounds 3]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+import numpy as np
+
+from common import build_world, emit, save_json
+
+
+def time_rounds(trainer, n_rounds, parallel=True):
+    trainer.round(0, parallel=parallel)    # warmup: compile + first agg
+    t0 = time.perf_counter()
+    for r in range(1, n_rounds + 1):
+        trainer.round(r, parallel=parallel)
+    return (time.perf_counter() - t0) / n_rounds * 1e6
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=32)
+    # CPU-friendly default grid; widen on real hardware, e.g.
+    #   --vehicles 4 8 16 --rsus 1 2 4 8
+    ap.add_argument("--vehicles", type=int, nargs="+", default=[4])
+    ap.add_argument("--rsus", type=int, nargs="+", default=[1, 2, 4])
+    args = ap.parse_args()
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
+
+    from repro.core import aggregation as agg
+    from repro.core.federation import FLConfig, FederatedTrainer
+    from repro.core.topology import HandoverMultiRSU, MultiRSU, SingleRSU
+
+    results = {}
+    x, y, parts, tree = build_world(n_vehicles=24, n_per_class=40,
+                                    iid=True, alpha=0.0)
+    data = [x[p] for p in parts]
+
+    for n_vehicles in args.vehicles:
+        for n_rsus in args.rsus:
+            if n_rsus > n_vehicles:
+                continue
+            cfg = FLConfig(n_vehicles=24, vehicles_per_round=n_vehicles,
+                           batch_size=args.batch, rounds=args.rounds + 1,
+                           local_iters=1, seed=0)
+            tr = FederatedTrainer(cfg, tree, data,
+                                  topology=MultiRSU(n_rsus=n_rsus))
+            us = time_rounds(tr, args.rounds)
+            emit("topology/multi_rsu/round", us,
+                 f"V={n_vehicles};R={n_rsus}")
+            sys.stdout.flush()
+            results[f"multi_v{n_vehicles}_r{n_rsus}"] = us
+
+            topo = HandoverMultiRSU(n_rsus=n_rsus, rsu_range=500.0,
+                                    round_duration=30.0, sync_every=2)
+            tr = FederatedTrainer(cfg, tree, data, topology=topo)
+            # sequential client path: handover cohort sizes vary per round,
+            # so the vmapped path would recompile mid-measurement
+            us = time_rounds(tr, args.rounds, parallel=False)
+            emit("topology/handover/round", us,
+                 f"V={n_vehicles};R={n_rsus}")
+            sys.stdout.flush()
+            results[f"handover_v{n_vehicles}_r{n_rsus}"] = us
+
+    # aggregation-only: tree-map vs fused kernel (interpret) on the real tree
+    from repro.core.aggregation import aggregate_flsimco
+    trees = [jax.tree.map(lambda l, i=i: l + i, tree) for i in range(8)]
+    blur = np.linspace(10.0, 24.0, 8)
+    for backend in ("tree", "interpret"):
+        with agg.wagg_backend(backend):
+            out = aggregate_flsimco(trees, blur)     # warmup
+            jax.block_until_ready(jax.tree.leaves(out)[0])
+            t0 = time.perf_counter()
+            for _ in range(3):
+                out = aggregate_flsimco(trees, blur)
+                jax.block_until_ready(jax.tree.leaves(out)[0])
+            us = (time.perf_counter() - t0) / 3 * 1e6
+        emit(f"topology/agg_{backend}/resnet18_n8", us, "")
+        results[f"agg_{backend}"] = us
+
+    save_json("multi_rsu.json", results)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Handover demo: vehicles crossing RSU boundaries mid-training.
+
+Runs the HandoverMultiRSU topology on the synthetic vehicular world and
+narrates each round: which RSU every participant downloaded from, where
+it ended up uploading, which uploads were discounted as stale, and when
+the regional server re-synchronized the RSU models.
+
+  PYTHONPATH=src python examples/handover.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.federation import FLConfig, FederatedTrainer
+from repro.core.topology import HandoverMultiRSU
+from repro.data.synthetic import make_dataset, partition_dirichlet
+from repro.models.resnet import init_resnet
+
+
+def main():
+    print("== FLSimCo multi-RSU handover demo ==")
+    x, y = make_dataset(n_per_class=60, seed=0)
+    parts = partition_dirichlet(y, n_clients=8, alpha=0.1,
+                                min_per_client=40, seed=0)
+    cfg = FLConfig(n_vehicles=8, vehicles_per_round=4, batch_size=32,
+                   rounds=6, local_iters=1, lr=0.5, aggregator="flsimco")
+    topo = HandoverMultiRSU(n_rsus=3, rsu_range=500.0, round_duration=12.0,
+                            stale_discount=0.5, sync_every=3)
+    tree = init_resnet(get_config("resnet18-cifar"), jax.random.PRNGKey(0))
+    trainer = FederatedTrainer(cfg, tree, [x[p] for p in parts],
+                               topology=topo)
+    print(f"road: ring of {topo.road_length:.0f} m, "
+          f"{topo.n_rsus} RSUs x {topo.rsu_range:.0f} m coverage, "
+          f"{cfg.n_vehicles} vehicles\n")
+
+    for r in range(cfg.rounds):
+        pos_before = topo.positions.copy()
+        rec = trainer.round(r)
+        # unwrap across the ring boundary: forward distance, not raw delta
+        moved = (topo.positions - pos_before) % topo.road_length
+        print(f"round {r}: loss={rec['loss']:.4f}  "
+              f"uploads/RSU={rec['rsu_sizes']}  "
+              f"handovers={rec['n_handovers']}"
+              + ("  [region sync]" if rec["synced"] else ""))
+        v = np.asarray(rec["velocities"])
+        print(f"  velocities: {np.round(v * 3.6, 1).tolist()} km/h; "
+              f"fleet moved {moved.min():.0f}-{moved.max():.0f} m")
+    view = topo.region_view()   # evaluation snapshot (merged RSU models)
+    n_params = sum(l.size for l in jax.tree.leaves(view))
+    n_total = sum(h["n_handovers"] for h in trainer.history)
+    print(f"\nregion model snapshot: {n_params:,} parameters "
+          f"merged from {topo.n_rsus} RSUs")
+    print(f"done — {n_total} handovers across {cfg.rounds} rounds; "
+          f"stale uploads were down-weighted x{topo.stale_discount}, "
+          f"region re-synced every {topo.sync_every} rounds.")
+
+
+if __name__ == "__main__":
+    main()

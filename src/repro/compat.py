@@ -1,0 +1,51 @@
+"""JAX version shims.
+
+The pinned wheels (requirements.txt) predate three API graduations that
+newer TPU images ship; every in-repo caller goes through these wrappers:
+
+* `shard_map`: `jax.experimental.shard_map` (kwarg `check_rep`) ->
+  `jax.shard_map` (kwarg `check_vma`).
+* `set_mesh`: the ambient-mesh context manager. On 0.4.x a `Mesh` is
+  itself the context manager; newer JAX uses `jax.set_mesh`.
+* `get_abstract_mesh`: newer JAX reads the ambient mesh via
+  `jax.sharding.get_abstract_mesh()`; 0.4.x keeps the physical mesh in
+  thread-local resources. Both return an object with `.empty`,
+  `.axis_names`, and `.shape`, which is all our callers touch.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)
+
+
+def set_mesh(mesh):
+    """Context manager binding `mesh` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh (empty mesh when none is bound)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+    return thread_resources.env.physical_mesh
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """AbstractMesh across the 0.4.x ((name, size), ...) and the newer
+    (sizes, names) constructor signatures."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(axis_sizes, axis_names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -10,23 +10,79 @@ Two implementations of each scheme:
   all-reduce — the TPU-native production form used by launch/steps.py.
   Equivalence of the two is covered by tests/test_aggregation.py.
 
-Schemes:
-  flsimco  — blur-weighted (Eq. 11), weight_n ∝ (ΣL − L_n)/ΣL
-  fedavg   — baseline1: uniform average (McMahan et al.)
+Registry (``AGGREGATORS``, the names ``FLConfig.aggregator`` accepts):
+  flsimco  — blur-weighted (Eq. 11), weight_n ∝ (ΣL − L_n)/ΣL — the paper
+  fedavg   — baseline1: uniform average (McMahan et al.), optionally
+             data-size weighted
   discard  — baseline2: drop clients above the blur threshold, then fedavg
-  (FedCo reuses fedavg for parameters; its queue logic lives in core/ssl.py)
+  fedco    — baseline3: FedAvg parameters + the FedCo global negative
+             queue; handled by the trainer (queue logic in core/ssl.py),
+             so it has no entry here
+  softmax  — beyond-paper: w ∝ softmax(−L/T), scale-free in N
+  inverse  — beyond-paper: w ∝ 1/(L+eps), inverse-variance-flavored
+
+Host-side weighted sums route through the fused Pallas kernel
+(kernels/wagg.py) on TPU — one HBM pass over N stacked models instead of
+N tree-map passes — and fall back to the jnp tree-map path off-TPU.
+``wagg_backend("interpret")`` forces the kernel in interpret mode (used by
+tests/test_topology.py to exercise the kernel path on CPU).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 
+# Backend for host-side weighted tree sums:
+#   auto      — fused Pallas kernel on TPU, jnp tree-map elsewhere
+#   fused     — force the compiled Pallas kernel (TPU)
+#   interpret — force the Pallas kernel in interpret mode (any backend)
+#   tree      — force the jnp tree-map path
+_WAGG_BACKENDS = ("auto", "fused", "interpret", "tree")
+_wagg_backend = "auto"
+
+
+def set_wagg_backend(mode: str) -> str:
+    """Select the weighted-sum backend; returns the previous mode."""
+    global _wagg_backend
+    if mode not in _WAGG_BACKENDS:
+        raise ValueError(f"wagg backend {mode!r} not in {_WAGG_BACKENDS}")
+    prev, _wagg_backend = _wagg_backend, mode
+    return prev
+
+
+@contextlib.contextmanager
+def wagg_backend(mode: str):
+    """Scoped `set_wagg_backend` (tests force 'interpret' through this)."""
+    prev = set_wagg_backend(mode)
+    try:
+        yield
+    finally:
+        set_wagg_backend(prev)
+
+
+def _resolve_wagg_backend() -> str:
+    if _wagg_backend != "auto":
+        return _wagg_backend
+    return "fused" if jax.default_backend() == "tpu" else "tree"
+
+
 def _weighted_tree_sum(trees: Sequence, weights) -> object:
-    """sum_n w_n * tree_n (weights: (N,) array)."""
+    """sum_n w_n * tree_n (weights: (N,) array).
+
+    Every host-side aggregation scheme funnels through here, so this is
+    the single dispatch point between the fused kernel and the tree-map
+    reference path.
+    """
     weights = jnp.asarray(weights, jnp.float32)
+    backend = _resolve_wagg_backend()
+    if backend != "tree":
+        from repro.kernels import ops as _kops  # deferred: keep core import-light
+        return _kops.wagg_tree(trees, weights,
+                               interpret=(backend == "interpret"))
 
     def comb(*leaves):
         stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])

@@ -7,10 +7,20 @@ One `FederatedTrainer` drives the full loop of the paper:
           local (velocity-blurred) images, and runs `local_iters` SGD steps
           on the dual-temperature loss
   Step 3  vehicles upload parameters + velocity
-  Step 4  the RSU aggregates with the selected scheme (flsimco / fedavg /
-          discard / fedco) and the next round begins
+  Step 4  the RSU aggregates with the selected scheme (see the
+          ``AGGREGATORS`` registry in core/aggregation.py: flsimco /
+          fedavg / discard / softmax / inverse, plus the trainer-handled
+          fedco) and the next round begins
 
-Clients within a round are executed with ``jax.vmap`` over a stacked
+The *shape* of a round — how many RSUs there are, which vehicles talk to
+which RSU, and how RSU models merge — is delegated to a pluggable
+`Topology` (core/topology.py): `SingleRSU` (paper-exact, the default),
+`MultiRSU` (hierarchical two-level Eq. 11), and `HandoverMultiRSU`
+(vehicles migrate between RSU coverage ranges mid-training). The trainer
+keeps the client-side machinery: sampling, batching, blur, and the local
+SGD steps.
+
+Clients within a cohort are executed with ``jax.vmap`` over a stacked
 parameter tree — the same "cohorts in parallel" dataflow the production
 mesh uses (launch/steps.py), just with the batch axis instead of mesh
 axes. A sequential python path is kept for readability/debugging and is
@@ -22,6 +32,7 @@ architecture from the zoo (token views), per DESIGN.md §2.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from functools import partial
 from typing import Callable, Optional
@@ -34,6 +45,7 @@ from repro.core import aggregation as agg
 from repro.core import ssl
 from repro.core.dt_loss import dt_loss_matrix, info_nce_loss
 from repro.core.mobility import KMH_100, MobilityModel, apply_motion_blur
+from repro.core.topology import SingleRSU, Topology
 from repro.models.resnet import resnet_apply
 from repro.optim.optimizers import cosine_schedule, sgd
 
@@ -50,7 +62,8 @@ class FLConfig:
     weight_decay: float = 5e-4
     tau_alpha: float = 0.1
     tau_beta: float = 1.0
-    aggregator: str = "flsimco"   # flsimco | fedavg | discard | fedco
+    aggregator: str = "flsimco"   # any AGGREGATORS name (core/aggregation.py)
+                                  # or "fedco" (trainer-handled baseline)
     blur_threshold: float = KMH_100
     moco_momentum: float = 0.99   # FedCo key-encoder EMA (Table 1)
     queue_len: int = 4096         # FedCo global queue (Sec. 5.2)
@@ -146,12 +159,53 @@ def make_moco_local_train_step(cfg: FLConfig):
 # trainer
 # --------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=16)
+def _cached_local_steps(local_iters, momentum, weight_decay,
+                        tau_alpha, tau_beta):
+    f = make_local_train_step(FLConfig(
+        local_iters=local_iters, momentum=momentum,
+        weight_decay=weight_decay, tau_alpha=tau_alpha, tau_beta=tau_beta))
+    return jax.jit(f), jax.jit(jax.vmap(f, in_axes=(0, 0, 0, None)))
+
+
+def _jitted_local_steps(cfg: FLConfig):
+    """Share jitted client steps across trainers.
+
+    Keyed on exactly the fields the compiled step closes over — not the
+    whole FLConfig — so seed/aggregator/round-count sweeps reuse one
+    compilation. Bounded so long sweeps don't pin executables forever.
+    """
+    return _cached_local_steps(cfg.local_iters, cfg.momentum,
+                               cfg.weight_decay, cfg.tau_alpha, cfg.tau_beta)
+
+
+@functools.lru_cache(maxsize=16)
+def _cached_moco_step(local_iters, momentum, weight_decay, moco_momentum):
+    return jax.jit(make_moco_local_train_step(FLConfig(
+        local_iters=local_iters, momentum=momentum,
+        weight_decay=weight_decay, moco_momentum=moco_momentum)))
+
+
+def _jitted_moco_step(cfg: FLConfig):
+    return _cached_moco_step(cfg.local_iters, cfg.momentum,
+                             cfg.weight_decay, cfg.moco_momentum)
+
+
 class FederatedTrainer:
-    """Simulates the RSU + vehicle fleet of FLSimCo on host."""
+    """Simulates the RSU(s) + vehicle fleet of FLSimCo on host.
+
+    Round structure is delegated to `topology` (default: the paper's
+    `SingleRSU`); the trainer owns sampling, batching, and local SGD.
+    """
 
     def __init__(self, cfg: FLConfig, global_tree, client_data: list,
                  mobility: Optional[MobilityModel] = None,
-                 blur_images: bool = True):
+                 blur_images: bool = True,
+                 topology: Optional[Topology] = None):
+        if cfg.aggregator not in agg.AGGREGATORS and cfg.aggregator != "fedco":
+            raise ValueError(
+                f"unknown aggregator {cfg.aggregator!r}; valid: "
+                f"{sorted(agg.AGGREGATORS) + ['fedco']}")
         self.cfg = cfg
         self.global_tree = global_tree
         self.client_data = client_data          # list of (images ndarray)
@@ -160,9 +214,7 @@ class FederatedTrainer:
         self.lr_fn = cosine_schedule(cfg.lr, cfg.rounds)
         self.rng = np.random.RandomState(cfg.seed)
         self.key = jax.random.PRNGKey(cfg.seed)
-        self._local = jax.jit(make_local_train_step(cfg))
-        self._vlocal = jax.jit(jax.vmap(make_local_train_step(cfg),
-                                        in_axes=(0, 0, 0, None)))
+        self._local, self._vlocal = _jitted_local_steps(cfg)
         self.history: list[dict] = []
         # FedCo state
         if cfg.aggregator == "fedco":
@@ -171,7 +223,9 @@ class FederatedTrainer:
                 jax.random.PRNGKey(cfg.seed + 1), (cfg.queue_len, cfg.feature_dim))
             self.global_queue /= jnp.linalg.norm(self.global_queue, axis=-1,
                                                  keepdims=True)
-            self._moco_local = jax.jit(make_moco_local_train_step(cfg))
+            self._moco_local = _jitted_moco_step(cfg)
+        self.topology = topology if topology is not None else SingleRSU()
+        self.topology.bind(self)
 
     # -- sampling ----------------------------------------------------------
 
@@ -194,51 +248,57 @@ class FederatedTrainer:
                                        self.mobility.camera_const)
         return images
 
-    # -- one round (Steps 2-4) ----------------------------------------------
+    # -- cohort execution + host aggregation (used by every topology) -------
 
-    def round(self, r: int, parallel: bool = True) -> dict:
-        cfg = self.cfg
-        ids, velocities = self._sample_round()
-        blur = self.mobility.blur_level(velocities)
-        lr = self.lr_fn(r)
-        self.key, *cks = jax.random.split(self.key, len(ids) + 1)
+    def _run_cohort(self, tree, ids, velocities, keys, lr,
+                    parallel: bool = True, batches=None):
+        """Run one cohort of clients from init model `tree`.
 
-        if cfg.aggregator == "fedco":
-            return self._round_fedco(r, ids, velocities, cks, lr)
-
-        batches = jnp.stack([self._client_batch(c, v)
-                             for c, v in zip(ids, velocities)])
+        Returns (client_trees, losses). `parallel=True` vmaps the cohort
+        over a stacked tree; the sequential path is tested equivalent.
+        `batches` lets a topology pre-draw batches in round order (the
+        host RNG is a sequential stream, so draw order matters for
+        cross-topology equivalence).
+        """
+        if batches is None:
+            batches = jnp.stack([self._client_batch(c, v)
+                                 for c, v in zip(ids, velocities)])
         if parallel:
             stacked = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape),
-                self.global_tree)
-            trees, losses = self._vlocal(stacked, batches, jnp.stack(cks), lr)
+                lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), tree)
+            trees, losses = self._vlocal(stacked, batches,
+                                         jnp.stack(keys), lr)
             client_trees = [jax.tree.map(lambda x: x[i], trees)
                             for i in range(len(ids))]
             losses = list(np.asarray(losses))
         else:
             client_trees, losses = [], []
             for i, cid in enumerate(ids):
-                t, l = self._local(self.global_tree, batches[i], cks[i], lr)
+                t, l = self._local(tree, batches[i], keys[i], lr)
                 client_trees.append(t)
                 losses.append(float(l))
+        return client_trees, losses
 
+    def _host_aggregate(self, client_trees, velocities, blur):
+        """Single-RSU Step 4: dispatch on the configured aggregator."""
+        cfg = self.cfg
         if cfg.aggregator == "flsimco":
-            new_tree = agg.aggregate_flsimco(client_trees, blur,
-                                             cfg.normalize_weights)
-        elif cfg.aggregator == "discard":
-            new_tree = agg.aggregate_discard(client_trees, velocities,
-                                             cfg.blur_threshold)
-        elif cfg.aggregator == "softmax":          # beyond-paper variant
-            new_tree = agg.aggregate_softmax(client_trees, blur)
-        elif cfg.aggregator == "inverse":          # beyond-paper variant
-            new_tree = agg.aggregate_inverse(client_trees, blur)
-        else:
-            new_tree = agg.aggregate_fedavg(client_trees)
-        self.global_tree = new_tree
-        rec = {"round": r, "loss": float(np.mean(losses)),
-               "velocities": np.asarray(velocities).tolist(),
-               "lr": float(lr)}
+            return agg.aggregate_flsimco(client_trees, blur,
+                                         cfg.normalize_weights)
+        if cfg.aggregator == "discard":
+            return agg.aggregate_discard(client_trees, velocities,
+                                         cfg.blur_threshold)
+        if cfg.aggregator == "softmax":            # beyond-paper variant
+            return agg.aggregate_softmax(client_trees, blur)
+        if cfg.aggregator == "inverse":            # beyond-paper variant
+            return agg.aggregate_inverse(client_trees, blur)
+        assert cfg.aggregator == "fedavg", cfg.aggregator  # ctor validates
+        return agg.aggregate_fedavg(client_trees)
+
+    # -- one round (Steps 2-4, structured by the topology) -------------------
+
+    def round(self, r: int, parallel: bool = True) -> dict:
+        rec = self.topology.run_round(self, r, parallel=parallel)
         self.history.append(rec)
         return rec
 
@@ -256,10 +316,9 @@ class FederatedTrainer:
         self.global_queue = ssl.fedco_merge_queues(self.global_queue, kvec_list)
         self.global_tree = agg.aggregate_fedavg(trees)
         self.key_tree = jax.tree.map(jnp.copy, self.global_tree)
-        rec = {"round": r, "loss": float(np.mean(losses)),
-               "velocities": np.asarray(velocities).tolist(), "lr": float(lr)}
-        self.history.append(rec)
-        return rec
+        # history is appended by round(), which every topology routes through
+        return {"round": r, "loss": float(np.mean(losses)),
+                "velocities": np.asarray(velocities).tolist(), "lr": float(lr)}
 
     def run(self, rounds: Optional[int] = None, log_every: int = 10,
             parallel: bool = True):

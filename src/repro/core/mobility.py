@@ -60,6 +60,23 @@ class MobilityModel:
     def is_blurred(self, v, threshold=KMH_100):
         return jnp.asarray(v) > threshold
 
+    # -- positions (multi-RSU handover, beyond-paper) ----------------------
+    # The paper needs only velocities (one RSU covers everyone). The
+    # handover topology (core/topology.py) additionally tracks where each
+    # vehicle *is*: a ring road of length `road_length` partitioned into
+    # equal RSU coverage ranges, positions advancing by v*dt per round.
+
+    def init_positions(self, key, n: int, road_length: float):
+        """Uniform initial positions on the ring road [0, road_length)."""
+        return jax.random.uniform(key, (n,), minval=0.0, maxval=road_length)
+
+    def advance_positions(self, positions, velocities, dt: float,
+                          road_length: float):
+        """positions + v*dt, wrapped (vehicles circulate the ring road)."""
+        p = jnp.asarray(positions, jnp.float32)
+        v = jnp.asarray(velocities, jnp.float32)
+        return jnp.mod(p + v * dt, road_length)
+
 
 def motion_blur_kernel(v, camera_const: float = 0.58, max_len: int = 9):
     """Horizontal linear motion-blur PSF whose length grows with velocity.

@@ -1,0 +1,351 @@
+"""RSU topologies — pluggable round orchestration for `FederatedTrainer`.
+
+The paper's FLSimCo loop (Sec. 4) assumes a single RSU, yet its own
+motivation — vehicles at high velocity — means clients cross RSU coverage
+boundaries mid-training. This module factors the *shape of a round* out of
+the trainer into a `Topology` strategy (DESIGN.md §3):
+
+  SingleRSU         paper-exact Steps 2-4: one RSU, one cohort, one
+                    host-side aggregation (any scheme in the registry).
+  MultiRSU          N RSUs under one regional server. Each RSU trains its
+                    cohort as a vmapped batch and aggregates locally
+                    (Eq. 11), then the region merges the RSU models —
+                    `aggregate_hierarchical` on host, or the
+                    `two_stage_weighted_psum` collective when a
+                    (pod, data) mesh is available. With n_rsus=1 this
+                    reduces exactly to SingleRSU (tests/test_topology.py).
+  HandoverMultiRSU  MultiRSU plus vehicle motion: per-RSU models persist
+                    across rounds, vehicles hold positions on a circular
+                    road (`MobilityModel.init_positions` /
+                    `advance_positions`) and download from the RSU covering
+                    their position at round start. Positions advance during
+                    local training; a vehicle that ends the round under a
+                    different RSU uploads *there* (a handover), and the
+                    receiving RSU discounts that stale upload's Eq.-11
+                    weight by `stale_discount` because it was trained from
+                    another RSU's model. Every `sync_every` rounds the
+                    region hierarchically merges the RSU models.
+
+All three funnel their weighted sums through
+`core.aggregation._weighted_tree_sum`, i.e. the fused Pallas `wagg` kernel
+on TPU (tree-map fallback off-TPU; `wagg_backend("interpret")` forces the
+kernel anywhere).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import aggregation as agg
+from repro.core.hierarchical import (aggregate_hierarchical,
+                                     two_stage_weighted_psum)
+
+
+class Topology:
+    """Strategy object: owns the structure of one federated round.
+
+    `bind(trainer)` is called once from the trainer constructor (validate
+    the config, initialize topology state); `run_round(trainer, r)` runs
+    Steps 2-4 for round `r`, updates `trainer.global_tree`, and returns the
+    round record (the trainer appends it to `history`).
+    """
+
+    name = "base"
+
+    def bind(self, trainer) -> None:
+        pass
+
+    def run_round(self, trainer, r: int, parallel: bool = True) -> dict:
+        raise NotImplementedError
+
+
+class SingleRSU(Topology):
+    """Paper-exact FLSimCo: one RSU aggregating one sampled cohort."""
+
+    name = "single"
+
+    def run_round(self, trainer, r: int, parallel: bool = True) -> dict:
+        cfg = trainer.cfg
+        ids, velocities = trainer._sample_round()
+        lr = trainer.lr_fn(r)
+        trainer.key, *cks = jax.random.split(trainer.key, len(ids) + 1)
+        if cfg.aggregator == "fedco":
+            rec = trainer._round_fedco(r, ids, velocities, cks, lr)
+            rec["topology"] = self.name
+            return rec
+        client_trees, losses = trainer._run_cohort(
+            trainer.global_tree, ids, velocities, cks, lr, parallel)
+        blur = trainer.mobility.blur_level(velocities)
+        trainer.global_tree = trainer._host_aggregate(
+            client_trees, velocities, blur)
+        return {"round": r, "loss": float(np.mean(losses)),
+                "velocities": np.asarray(velocities).tolist(),
+                "lr": float(lr), "topology": self.name}
+
+
+def _require_flsimco(trainer, name: str) -> None:
+    if trainer.cfg.aggregator != "flsimco":
+        raise ValueError(
+            f"{name} implements the hierarchical Eq.-11 (blur-weighted) "
+            f"extension and requires aggregator='flsimco'; got "
+            f"{trainer.cfg.aggregator!r}. Run other schemes under SingleRSU.")
+    if not trainer.cfg.normalize_weights:
+        raise ValueError(
+            f"{name} always normalizes Eq.-11 weights (DESIGN.md deviation "
+            f"#2); normalize_weights=False would break the "
+            f"MultiRSU(1) == SingleRSU equivalence. Use SingleRSU for the "
+            f"unnormalized literal form.")
+
+
+class MultiRSU(Topology):
+    """N RSUs + regional server, no motion: hierarchical Eq. 11.
+
+    The sampled cohort is dealt round-robin across RSUs; each RSU runs its
+    vehicles as one vmapped batch. Aggregation is two-level: Eq.-11 within
+    each RSU, then blur-weighted (optionally vehicle-count-scaled) across
+    RSU models — `aggregate_hierarchical` on host, or the
+    `two_stage_weighted_psum` collective over a (pod=n_rsus, data=cohort)
+    mesh when `mesh_aggregate=True` and enough devices exist.
+    """
+
+    name = "multi"
+
+    def __init__(self, n_rsus: int = 2, count_scaled: bool = True,
+                 mesh_aggregate: bool = False):
+        if n_rsus < 1:
+            raise ValueError("n_rsus must be >= 1")
+        self.n_rsus = n_rsus
+        self.count_scaled = count_scaled
+        self.mesh_aggregate = mesh_aggregate
+
+    def bind(self, trainer) -> None:
+        _require_flsimco(trainer, "MultiRSU")
+        if self.mesh_aggregate:
+            # fail before any training work, not after the cohort has run
+            n = trainer.cfg.vehicles_per_round
+            if n % self.n_rsus:
+                raise ValueError(
+                    f"mesh_aggregate needs equal per-RSU cohorts: "
+                    f"vehicles_per_round={n} not divisible by "
+                    f"n_rsus={self.n_rsus}")
+            if jax.device_count() < n:
+                raise ValueError(
+                    f"mesh_aggregate needs {n} devices "
+                    f"({self.n_rsus} RSUs x {n // self.n_rsus} vehicles); "
+                    f"have {jax.device_count()}")
+
+    def run_round(self, trainer, r: int, parallel: bool = True) -> dict:
+        ids, velocities = trainer._sample_round()
+        lr = trainer.lr_fn(r)
+        trainer.key, *cks = jax.random.split(trainer.key, len(ids) + 1)
+        blur = trainer.mobility.blur_level(velocities)
+        # draw every batch in round order BEFORE partitioning: the host RNG
+        # is sequential, so this keeps MultiRSU(1) bit-identical to SingleRSU
+        batches = jnp.stack([trainer._client_batch(c, v)
+                             for c, v in zip(ids, velocities)])
+        assign = np.arange(len(ids)) % self.n_rsus
+        groups, blur_groups, losses, sizes = [], [], [], []
+        for rsu in range(self.n_rsus):
+            sel = np.where(assign == rsu)[0]
+            if sel.size == 0:
+                continue
+            trees, ls = trainer._run_cohort(
+                trainer.global_tree, ids[sel], velocities[sel],
+                [cks[i] for i in sel], lr, parallel, batches=batches[sel])
+            groups.append(trees)
+            blur_groups.append(blur[sel])
+            losses.extend(ls)
+            sizes.append(int(sel.size))
+        if self.mesh_aggregate:
+            trainer.global_tree = self._mesh_aggregate(groups, blur_groups)
+        else:
+            trainer.global_tree = aggregate_hierarchical(
+                groups, blur_groups, self.count_scaled)
+        return {"round": r, "loss": float(np.mean(losses)),
+                "velocities": np.asarray(velocities).tolist(),
+                "lr": float(lr), "topology": self.name, "rsu_sizes": sizes}
+
+    def _mesh_aggregate(self, groups: Sequence, blur_groups: Sequence):
+        """Region merge as the two-stage collective over a (pod, data) mesh.
+
+        Requires equal cohort sizes and n_rsus * cohort_size devices — the
+        mesh *is* the topology here (one device slice per vehicle).
+        """
+        sizes = {len(g) for g in groups}
+        if len(sizes) != 1:
+            raise ValueError("mesh_aggregate needs equal per-RSU cohorts; "
+                             f"got sizes {sorted(len(g) for g in groups)}")
+        m = sizes.pop()
+        need = len(groups) * m
+        if jax.device_count() < need:
+            raise ValueError(
+                f"mesh_aggregate needs {need} devices "
+                f"({len(groups)} RSUs x {m} vehicles); "
+                f"have {jax.device_count()}")
+        mesh = jax.make_mesh((len(groups), m), ("pod", "data"))
+        flat = [t for g in groups for t in g]                  # rsu-major
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *flat)
+        blur = jnp.concatenate([jnp.asarray(b, jnp.float32).reshape(-1)
+                                for b in blur_groups])
+
+        def per_cohort(tree, L):
+            return two_stage_weighted_psum(
+                jax.tree.map(lambda x: x[0], tree), L[0],
+                count_scaled=self.count_scaled)
+
+        from repro.compat import shard_map
+        fn = shard_map(per_cohort, mesh=mesh,
+                       in_specs=(P(("pod", "data")), P(("pod", "data"))),
+                       out_specs=P(), check=False)
+        return fn(stacked, blur)
+
+
+class HandoverMultiRSU(Topology):
+    """MultiRSU with persistent per-RSU models and vehicle motion.
+
+    Road model: a ring road of length n_rsus * rsu_range; RSU r covers
+    [r*rsu_range, (r+1)*rsu_range). Each round every vehicle's position
+    advances by v * round_duration (positions wrap), so a participant can
+    download from RSU A and — after training — upload to RSU B. Such stale
+    uploads get their Eq.-11 weight multiplied by `stale_discount` before
+    renormalization. RSUs that receive no uploads keep their model.
+    Every `sync_every` rounds the regional server merges the RSU models
+    with blur-weighted, upload-count-scaled level-2 weights (accumulated
+    since the last sync) and redistributes the merged model.
+    """
+
+    name = "handover"
+
+    def __init__(self, n_rsus: int = 2, rsu_range: float = 1000.0,
+                 round_duration: float = 20.0, stale_discount: float = 0.5,
+                 sync_every: int = 5, count_scaled: bool = True):
+        if n_rsus < 1:
+            raise ValueError("n_rsus must be >= 1")
+        if not 0.0 <= stale_discount <= 1.0:
+            raise ValueError("stale_discount must be in [0, 1]")
+        if sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
+        self.n_rsus = n_rsus
+        self.rsu_range = rsu_range
+        self.road_length = n_rsus * rsu_range
+        self.round_duration = round_duration
+        self.stale_discount = stale_discount
+        self.sync_every = sync_every
+        self.count_scaled = count_scaled
+        self.positions: Optional[np.ndarray] = None
+        self.rsu_models: list = []
+        self._blur_sum = np.zeros(n_rsus)
+        self._upload_count = np.zeros(n_rsus)
+
+    def bind(self, trainer) -> None:
+        _require_flsimco(trainer, "HandoverMultiRSU")
+        trainer.key, kp = jax.random.split(trainer.key)
+        self.positions = np.asarray(trainer.mobility.init_positions(
+            kp, trainer.cfg.n_vehicles, self.road_length))
+        self.rsu_models = [trainer.global_tree] * self.n_rsus
+        # rebinding to a fresh trainer must not carry sync statistics over
+        self._blur_sum[:] = 0.0
+        self._upload_count[:] = 0.0
+
+    def rsu_index(self, positions) -> np.ndarray:
+        return (np.floor_divide(np.asarray(positions), self.rsu_range)
+                .astype(np.int64) % self.n_rsus)
+
+    def run_round(self, trainer, r: int, parallel: bool = True) -> dict:
+        cfg, mob = trainer.cfg, trainer.mobility
+        n = cfg.vehicles_per_round
+        ids = trainer.rng.choice(cfg.n_vehicles, size=n, replace=False)
+        # one velocity draw per vehicle per round, used for both the blur
+        # level of the participants' captures and the whole fleet's motion
+        trainer.key, kv = jax.random.split(trainer.key)
+        fleet_v = mob.sample(kv, cfg.n_vehicles)
+        velocities = jnp.take(fleet_v, jnp.asarray(ids))
+        lr = trainer.lr_fn(r)
+        trainer.key, *cks = jax.random.split(trainer.key, n + 1)
+
+        # Step 2: download from the RSU covering the round-start position
+        down = self.rsu_index(self.positions[ids])
+        client_trees: list = [None] * n
+        losses: list = [0.0] * n
+        for rsu in range(self.n_rsus):
+            sel = np.where(down == rsu)[0]
+            if sel.size == 0:
+                continue
+            trees, ls = trainer._run_cohort(
+                self.rsu_models[rsu], ids[sel], velocities[sel],
+                [cks[i] for i in sel], lr, parallel)
+            for j, i in enumerate(sel):
+                client_trees[i] = trees[j]
+                losses[i] = ls[j]
+
+        # motion during the round: everyone moves, positions wrap
+        self.positions = np.asarray(mob.advance_positions(
+            self.positions, fleet_v, self.round_duration, self.road_length))
+
+        # Step 3-4: upload to the RSU now covering the vehicle
+        up = self.rsu_index(self.positions[ids])
+        stale = up != down
+        blur = np.asarray(mob.blur_level(velocities))
+        upload_sizes = []
+        for rsu in range(self.n_rsus):
+            sel = np.where(up == rsu)[0]
+            upload_sizes.append(int(sel.size))
+            if sel.size == 0:
+                continue
+            w = np.asarray(agg.flsimco_weights(jnp.asarray(blur[sel])))
+            w = w * np.where(stale[sel], self.stale_discount, 1.0)
+            s = w.sum()
+            # all uploads stale with stale_discount=0: fall back to uniform
+            # rather than zeroing the RSU model
+            w = w / s if s > 1e-12 else np.full_like(w, 1.0 / len(w))
+            self.rsu_models[rsu] = agg._weighted_tree_sum(
+                [client_trees[i] for i in sel], w)
+            self._blur_sum[rsu] += float(blur[sel].sum())
+            self._upload_count[rsu] += sel.size
+
+        synced = (r + 1) % self.sync_every == 0
+        if synced:
+            trainer.global_tree = self._region_sync(mob)
+        # between syncs trainer.global_tree keeps the last merged model;
+        # RSU models stay divergent until sync (region_view() merges on
+        # demand without paying an n_rsus-model sum every round)
+        return {"round": r, "loss": float(np.mean(losses)),
+                "velocities": np.asarray(velocities).tolist(),
+                "lr": float(lr), "topology": self.name,
+                "rsu_sizes": upload_sizes,
+                "n_handovers": int(stale.sum()), "synced": synced}
+
+    def region_view(self):
+        """Uniform merge of the current per-RSU models — an evaluation
+        snapshot between syncs; does not touch topology state."""
+        return agg.aggregate_fedavg(self.rsu_models)
+
+    def _region_sync(self, mob):
+        """Level-2 merge of the per-RSU models (Eq. 11 over mean blur,
+        optionally scaled by uploads since the last sync)."""
+        counts = self._upload_count
+        mean_blur = np.where(
+            counts > 0, self._blur_sum / np.maximum(counts, 1.0),
+            float(mob.blur_level(mob.mu)))   # no uploads: prior mean blur
+        W = np.asarray(agg.flsimco_weights(jnp.asarray(mean_blur,
+                                                       jnp.float32)))
+        if self.count_scaled:
+            W = W * counts
+        s = W.sum()
+        W = W / s if s > 1e-12 else np.full_like(W, 1.0 / len(W))
+        merged = agg._weighted_tree_sum(self.rsu_models, W)
+        self.rsu_models = [merged] * self.n_rsus
+        self._blur_sum[:] = 0.0
+        self._upload_count[:] = 0.0
+        return merged
+
+
+TOPOLOGIES = {
+    "single": SingleRSU,
+    "multi": MultiRSU,
+    "handover": HandoverMultiRSU,
+}

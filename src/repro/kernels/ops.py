@@ -94,14 +94,21 @@ dt_loss.defvjp(_dt_fwd_vjp, _dt_bwd)
 # --------------------------------------------------------------------------
 
 def wagg_flat(stacked, w, interpret: bool | None = None):
-    """stacked (N, P) x w (N,) -> (P,) f32 via the fused kernel (pads P)."""
+    """stacked (N, P) x w (N,) -> (P,) f32 via the fused kernel (pads P).
+
+    On TPU the kernel tiles P into BP-sized VMEM blocks. In interpret mode
+    the per-grid-step overhead dominates (a ResNet-18 tree is ~5500 BP
+    blocks), so the whole padded axis becomes one block — same kernel,
+    grid of 1.
+    """
     interpret = _default_interpret() if interpret is None else interpret
     N, P = stacked.shape
     pad = (-P) % BP
     if pad:
         stacked = jnp.concatenate(
             [stacked, jnp.zeros((N, pad), stacked.dtype)], axis=1)
-    out = wagg_pallas(stacked, w, interpret=interpret)
+    block = stacked.shape[1] if interpret else BP
+    out = wagg_pallas(stacked, w, interpret=interpret, block=block)
     return out[:P]
 
 

@@ -6,8 +6,11 @@ N times plus N-1 more for the partial sums. This kernel tiles the flat
 parameter axis into VMEM blocks and reduces all N clients inside one pass:
 exactly P reads + P/N writes of traffic, the memory-bound optimum.
 
-Grid: (P / BP,). Block: (N, BP) client-major so the N-reduction is a
-VREG-resident dot with the (N,) weight vector.
+Grid: (P / block,). Block: (N, block) client-major so the N-reduction is a
+VREG-resident dot with the (N,) weight vector. On TPU the block defaults
+to BP (VMEM-sized); in interpret mode callers may pass a much larger block
+— there is no VMEM to respect and interpret overhead is per grid *step*,
+so a multi-million-parameter model wants a grid of ~1, not ~5000.
 """
 from __future__ import annotations
 
@@ -28,18 +31,24 @@ def _wagg_kernel(x_ref, w_ref, o_ref):
         preferred_element_type=jnp.float32)[0]
 
 
-def wagg_pallas(stacked, w, *, interpret: bool = True):
-    """stacked: (N, P) with P % BP == 0 (wrapper pads); w: (N,) -> (P,)."""
+def wagg_pallas(stacked, w, *, interpret: bool = True, block: int | None = None):
+    """stacked: (N, P) with P % block == 0 (wrapper pads); w: (N,) -> (P,).
+
+    block defaults to BP (the VMEM-sized tile). Interpret-mode callers
+    should pass a large block (see module docstring); the wrapper in
+    kernels/ops.py does this automatically.
+    """
     N, P = stacked.shape
-    assert P % BP == 0
+    block = BP if block is None else block
+    assert P % block == 0
     return pl.pallas_call(
         _wagg_kernel,
-        grid=(P // BP,),
+        grid=(P // block,),
         in_specs=[
-            pl.BlockSpec((N, BP), lambda i: (0, i)),
+            pl.BlockSpec((N, block), lambda i: (0, i)),
             pl.BlockSpec((N,), lambda i: (0,)),
         ],
-        out_specs=pl.BlockSpec((BP,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((P,), jnp.float32),
         interpret=interpret,
     )(stacked, w)

@@ -26,6 +26,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import INPUT_SHAPES, get_config, list_configs
 from repro.launch import steps as st
 from repro.launch.mesh import make_production_mesh
@@ -96,7 +97,7 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
                  "kv_dtype": kv_dtype}
     cdt = _jnp.int8 if kv_dtype == "int8" else _jnp.bfloat16
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         specs = st.input_specs(cfg, shape, mesh, cache_dtype=cdt)
         p_sds, _ = st.params_specs(cfg, mesh)
         # §Perf iteration 5: donate the aliasable state — params+momentum in
@@ -188,7 +189,7 @@ def calibrate_one(arch: str, shape_name: str, multi_pod: bool,
     costs = []
     for L in (L1, L2):
         cfg = _at_depth(base, L)
-        with jax.set_mesh(mesh), scan_ctx.unrolled(layers=scan_ctx.FULL,
+        with compat.set_mesh(mesh), scan_ctx.unrolled(layers=scan_ctx.FULL,
                                                    kv=scan_ctx.FULL):
             specs = st.input_specs(cfg, shape, mesh)
             p_sds, _ = st.params_specs(cfg, mesh)

@@ -17,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import INPUT_SHAPES, InputShape, get_config
 from repro.launch import steps as st
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -47,7 +48,7 @@ def main():
     if not a.reduced:
         specs = st.input_specs(cfg, shape, mesh)
         p_sds, _ = st.params_specs(cfg, mesh)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             compiled = jax.jit(decode, donate_argnums=(1,)).lower(
                 p_sds, specs).compile()
         print(compiled.memory_analysis())
@@ -60,7 +61,7 @@ def main():
                                                    "prefill"), mesh,
                                    param_dtype=jnp.float32)
     toks = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         last, cache = jax.jit(prefill)(params, {"tokens": toks})
         tok = jnp.argmax(last[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
         jdecode = jax.jit(decode)

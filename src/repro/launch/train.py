@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import INPUT_SHAPES, InputShape, get_config
 from repro.core.mobility import MobilityModel
 from repro.launch import steps as st
@@ -55,7 +56,7 @@ def main():
     if not a.reduced:
         specs = st.input_specs(cfg, shape, mesh)
         p_sds, _ = st.params_specs(cfg, mesh)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(fn).lower(p_sds, p_sds, specs)
             compiled = lowered.compile()
         print(compiled.memory_analysis())
@@ -66,7 +67,7 @@ def main():
     mom = st.init_momentum(params)
     mob = MobilityModel()
     jfn = jax.jit(fn)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for step in range(a.steps):
             k = jax.random.fold_in(key, step)
             batch = {"tokens": jax.random.randint(

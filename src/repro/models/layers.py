@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import scan_ctx
 from repro.models.sharding_hooks import constrain
 
@@ -565,7 +566,7 @@ def moe_block_ep(cfg, p, x):
 
     Falls back to moe_block when no model-parallel mesh is ambient.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if (mesh is None or mesh.empty or "model" not in mesh.axis_names
             or mesh.shape["model"] == 1):
         return moe_block(cfg, p, x)
@@ -621,10 +622,10 @@ def moe_block_ep(cfg, p, x):
     in_specs = (xspec, P(), P("model", None, None),
                 P("model", None, None) if wg is not None else P(),
                 P("model", None, None))
-    y, aux = jax.shard_map(local_fn, mesh=mesh,
-                           in_specs=in_specs,
-                           out_specs=(xspec, P()),
-                           check_vma=False)(
+    y, aux = compat.shard_map(local_fn, mesh=mesh,
+                              in_specs=in_specs,
+                              out_specs=(xspec, P()),
+                              check=False)(
         x, p["router"], p["w_up"], wg, p["w_down"])
     if "shared" in p:
         y = y + mlp_block(cfg, p["shared"], x.reshape(-1, x.shape[-1])
@@ -638,7 +639,7 @@ def moe_apply(cfg, p, x):
     if impl == "ep":
         return moe_block_ep(cfg, p, x)
     if impl == "auto":
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if (mesh is not None and not mesh.empty
                 and "model" in mesh.axis_names and mesh.shape["model"] > 1
                 and cfg.n_experts % mesh.shape["model"] == 0):

@@ -79,6 +79,7 @@ def test_pjit_train_step_equals_host_federated_round():
     mesh produces the same updated params as explicit per-cohort SGD +
     host-level Eq. 11 aggregation (local_iters=1, no momentum carry)."""
     import dataclasses
+    from repro import compat
     from repro.configs.base import get_config, InputShape
     from repro.launch import steps as st
     from repro.launch.mesh import make_host_mesh
@@ -97,7 +98,7 @@ def test_pjit_train_step_equals_host_federated_round():
     mom = st.init_momentum(params)
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
     blur = jnp.array([2.0, 8.0, 4.0, 6.0])
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         new_p, _, metrics = jax.jit(fn)(params, mom, {"tokens": toks,
                                                       "blur": blur})
 

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as stst
 
 from repro.core.dt_loss import (_dt_from_logits, dt_loss, dt_loss_matrix,

@@ -69,9 +69,10 @@ def test_two_stage_psum_matches_host_hierarchical():
         return two_stage_weighted_psum(
             jax.tree.map(lambda x: x[0], tree), L[0])
 
-    fn = jax.shard_map(per_cohort, mesh=mesh,
-                       in_specs=(P(("pod", "data")), P(("pod", "data"))),
-                       out_specs=P(), check_vma=False)
+    from repro.compat import shard_map
+    fn = shard_map(per_cohort, mesh=mesh,
+                   in_specs=(P(("pod", "data")), P(("pod", "data"))),
+                   out_specs=P(), check=False)
     out = fn(stacked, blur)
     expect = aggregate_hierarchical([trees], [blur])
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(expect["w"]),

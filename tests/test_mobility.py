@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as stst
 
 from repro.core.mobility import (KMH_100, MobilityModel, apply_motion_blur,

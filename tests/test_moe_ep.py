@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import get_config
 from repro.models import layers as L
 
@@ -37,6 +38,7 @@ def test_ep_matches_dense_ref_on_8_device_mesh():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs.base import get_config
         from repro.models import layers as L
 
@@ -48,7 +50,7 @@ def test_ep_matches_dense_ref_on_8_device_mesh():
                               (4, 8, cfg.d_model)) * 0.5
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         ref = L.moe_block_dense_ref(cfg, p, x)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             y, aux = jax.jit(lambda p, x: L.moe_block_ep(cfg, p, x))(p, x)
         err = float(jnp.abs(y - ref).max())
         assert err < 5e-5, err

@@ -7,8 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.configs.base import get_config, list_configs
 from repro.launch import sharding as sh
 from repro.launch.mesh import batch_axes
@@ -18,8 +19,8 @@ ARCHS = [a for a in list_configs() if a != "resnet18-cifar"]
 
 def prod_mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def _axis_prod(mesh, axes):

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs.base import INPUT_SHAPES, InputShape, get_config
 from repro.core.federation import FLConfig, FederatedTrainer
 from repro.data.synthetic import make_dataset, partition_dirichlet
@@ -58,7 +59,7 @@ def test_launch_train_step_runs_on_host_mesh():
     key = jax.random.PRNGKey(1)
     batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
              "blur": jnp.array([1.0, 2.0, 3.0, 4.0])}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         p2, m2, metrics = jax.jit(fn)(params, mom, batch)
     assert np.isfinite(float(metrics["loss"]))
     # params actually moved
@@ -78,7 +79,7 @@ def test_launch_serve_steps_roundtrip_host_mesh():
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(1)
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         last, cache = jax.jit(prefill)(params, {"tokens": toks[:, :-1]})
         logits, cache = jax.jit(decode)(
             params, {"tokens": toks[:, -1:],
@@ -101,6 +102,6 @@ def test_dt_objective_train_step():
     key = jax.random.PRNGKey(2)
     batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
              "blur": jnp.ones((4,))}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         p2, _, metrics = jax.jit(fn)(params, mom, batch)
     assert np.isfinite(float(metrics["loss"]))

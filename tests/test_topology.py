@@ -1,0 +1,149 @@
+"""Topology layer: SingleRSU / MultiRSU / HandoverMultiRSU equivalences.
+
+The aggregation path in every test here is the fused Pallas `wagg` kernel
+in interpret mode (forced via `wagg_backend("interpret")`) — the same
+kernel the TPU path compiles, so the trainer's hot aggregation loop is
+exercised end to end on CPU.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import aggregation as agg
+from repro.core.federation import FLConfig, FederatedTrainer
+from repro.core.mobility import MobilityModel
+from repro.core.topology import (TOPOLOGIES, HandoverMultiRSU, MultiRSU,
+                                 SingleRSU)
+from repro.data.synthetic import make_dataset, partition_iid
+from repro.models.resnet import init_resnet
+
+BASE_CFG = FLConfig(n_vehicles=6, vehicles_per_round=2, batch_size=16,
+                    rounds=2, local_iters=1, lr=0.3, seed=7)
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    x, y = make_dataset(n_per_class=40, seed=0)
+    parts = partition_iid(y, 6)
+    tree = init_resnet(get_config("resnet18-cifar"), jax.random.PRNGKey(0))
+    return [x[p] for p in parts], tree
+
+
+def _assert_trees_close(t1, t2, atol=1e-4):
+    for l1, l2 in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=atol)
+
+
+def test_multi_rsu_one_matches_single_rsu(tiny_world, monkeypatch):
+    """MultiRSU(n_rsus=1) is the paper loop — identical round outputs —
+    and the aggregation runs through the Pallas kernel."""
+    data, tree = tiny_world
+    from repro.kernels import ops as kops
+    calls = {"n": 0}
+    real = kops.wagg_flat
+
+    def spy(stacked, w, interpret=None):
+        calls["n"] += 1
+        return real(stacked, w, interpret)
+
+    monkeypatch.setattr(kops, "wagg_flat", spy)
+    with agg.wagg_backend("interpret"):
+        tr_s = FederatedTrainer(BASE_CFG, tree, data, topology=SingleRSU())
+        tr_m = FederatedTrainer(BASE_CFG, tree, data,
+                                topology=MultiRSU(n_rsus=1))
+        r_s = tr_s.round(0)
+        r_m = tr_m.round(0)
+    assert calls["n"] >= 2, "aggregation did not go through the wagg kernel"
+    np.testing.assert_allclose(r_s["loss"], r_m["loss"], rtol=1e-5)
+    assert r_s["velocities"] == r_m["velocities"]
+    _assert_trees_close(tr_s.global_tree, tr_m.global_tree)
+
+
+def test_hierarchical_equals_flat_through_trainer(tiny_world):
+    """Equal blur + count-scaled level-2 weights + equal cohort sizes:
+    the two-level MultiRSU round coincides with the flat SingleRSU round
+    (the `hierarchical_equals_flat` condition, driven through the trainer)."""
+    data, tree = tiny_world
+    cfg = dataclasses.replace(BASE_CFG, vehicles_per_round=4)
+    mob = MobilityModel(sigma=1e-4)       # near-constant velocity: equal blur
+    with agg.wagg_backend("interpret"):
+        tr_s = FederatedTrainer(cfg, tree, data, mobility=mob,
+                                topology=SingleRSU())
+        tr_m = FederatedTrainer(cfg, tree, data, mobility=mob,
+                                topology=MultiRSU(n_rsus=2, count_scaled=True))
+        r_s = tr_s.round(0)
+        r_m = tr_m.round(0)
+    assert r_m["rsu_sizes"] == [2, 2]
+    np.testing.assert_allclose(r_s["loss"], r_m["loss"], rtol=1e-5)
+    _assert_trees_close(tr_s.global_tree, tr_m.global_tree)
+
+
+def test_handover_migrates_and_syncs(tiny_world):
+    """Vehicles cross RSU boundaries between download and upload; RSU
+    models diverge between syncs and re-converge on sync rounds."""
+    data, tree = tiny_world
+    cfg = dataclasses.replace(BASE_CFG, vehicles_per_round=3, rounds=4)
+    topo = HandoverMultiRSU(n_rsus=2, rsu_range=200.0, round_duration=50.0,
+                            stale_discount=0.5, sync_every=2)
+    with agg.wagg_backend("interpret"):
+        tr = FederatedTrainer(cfg, tree, data, topology=topo)
+        hist = [tr.round(r, parallel=False) for r in range(4)]
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    # at ~29 m/s for 50 s a vehicle crosses 1450 m >> the 200 m range:
+    # handovers must occur over 12 participant draws
+    assert sum(h["n_handovers"] for h in hist) >= 1
+    assert [h["synced"] for h in hist] == [False, True, False, True]
+    # after a sync round every RSU holds the merged model, and the
+    # evaluation snapshot coincides with it
+    _assert_trees_close(topo.rsu_models[0], topo.rsu_models[1], atol=0)
+    _assert_trees_close(topo.region_view(), topo.rsu_models[0], atol=1e-5)
+    # positions stayed on the ring road
+    assert np.all(topo.positions >= 0) and np.all(
+        topo.positions < topo.road_length)
+
+
+def test_mesh_two_stage_collective_through_trainer(tiny_world):
+    """mesh_aggregate=True routes the region merge through
+    two_stage_weighted_psum under shard_map (1 RSU x 1 vehicle on the
+    single CPU device; larger meshes need more devices)."""
+    data, tree = tiny_world
+    cfg = dataclasses.replace(BASE_CFG, vehicles_per_round=1)
+    tr_h = FederatedTrainer(cfg, tree, data,
+                            topology=MultiRSU(n_rsus=1, mesh_aggregate=False))
+    tr_m = FederatedTrainer(cfg, tree, data,
+                            topology=MultiRSU(n_rsus=1, mesh_aggregate=True))
+    r_h = tr_h.round(0, parallel=False)
+    r_m = tr_m.round(0, parallel=False)
+    np.testing.assert_allclose(r_h["loss"], r_m["loss"], rtol=1e-5)
+    _assert_trees_close(tr_h.global_tree, tr_m.global_tree)
+
+
+def test_topology_validation(tiny_world):
+    data, tree = tiny_world
+    cfg = dataclasses.replace(BASE_CFG, aggregator="fedavg")
+    with pytest.raises(ValueError, match="flsimco"):
+        FederatedTrainer(cfg, tree, data, topology=MultiRSU(n_rsus=2))
+    with pytest.raises(ValueError, match="flsimco"):
+        FederatedTrainer(cfg, tree, data, topology=HandoverMultiRSU())
+    cfg = dataclasses.replace(BASE_CFG, normalize_weights=False)
+    with pytest.raises(ValueError, match="normalize"):
+        FederatedTrainer(cfg, tree, data, topology=MultiRSU(n_rsus=2))
+    with pytest.raises(ValueError):
+        MultiRSU(n_rsus=0)
+    with pytest.raises(ValueError):
+        HandoverMultiRSU(stale_discount=2.0)
+    assert set(TOPOLOGIES) == {"single", "multi", "handover"}
+
+
+def test_wagg_backend_switch_roundtrip():
+    assert agg.set_wagg_backend("tree") in agg._WAGG_BACKENDS
+    agg.set_wagg_backend("auto")
+    with pytest.raises(ValueError):
+        agg.set_wagg_backend("nope")
+    with agg.wagg_backend("interpret"):
+        assert agg._resolve_wagg_backend() == "interpret"
+    assert agg._resolve_wagg_backend() in ("tree", "fused")
