@@ -18,8 +18,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import build_world, emit, save_json
-from repro.core.federation import FLConfig, FederatedTrainer, gradient_std
+from benchmarks.common import build_scenario, emit, save_json
+from repro.core import scenario as scn
+from repro.core.federation import gradient_std
 
 
 def main(args=None):
@@ -33,14 +34,12 @@ def main(args=None):
 
     out = {}
     for agg in ("flsimco", "softmax", "inverse", "fedavg"):
-        x, y, parts, tree = build_world(a.vehicles, a.n_per_class, iid=False,
-                                        alpha=0.1, min_per_client=30)
-        cfg = FLConfig(n_vehicles=a.vehicles, vehicles_per_round=a.per_round,
-                       batch_size=a.batch, rounds=a.rounds, aggregator=agg,
-                       lr=0.5, seed=0)
-        tr = FederatedTrainer(cfg, tree, [x[p] for p in parts])
+        sc = build_scenario(a.vehicles, a.n_per_class, iid=False, alpha=0.1,
+                            min_per_client=30, aggregator=agg,
+                            vehicles_per_round=a.per_round,
+                            batch_size=a.batch, rounds=a.rounds, lr=0.5)
         t0 = time.time()
-        hist = tr.run(log_every=0)
+        _, hist = scn.run(sc)
         losses = [h["loss"] for h in hist]
         out[agg] = {"grad_std": gradient_std(losses),
                     "final_loss": float(np.mean(losses[-2:])),

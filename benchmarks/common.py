@@ -39,6 +39,18 @@ def build_world(n_vehicles: int, n_per_class: int, iid: bool, alpha: float,
     return x, y, parts, tree
 
 
+def build_scenario(n_vehicles: int, n_per_class: int, iid: bool,
+                   alpha: float = 0.1, seed: int = 0,
+                   min_per_client: int = 0, **scenario_kwargs):
+    """Declarative world construction: every fig*/beyond driver describes
+    its experiment as one `Scenario` (data/model built lazily inside)."""
+    from repro.core.scenario import Scenario
+    return Scenario(partitioner="iid" if iid else "dirichlet", alpha=alpha,
+                    n_per_class=n_per_class, min_per_client=min_per_client,
+                    data_seed=seed, n_vehicles=n_vehicles, seed=seed,
+                    **scenario_kwargs)
+
+
 def probe_accuracy(tree, x, y, n_train=600, n_test=300):
     from repro.eval.probe import encode, knn_top1
     n_train = min(n_train, int(0.8 * len(x)))

@@ -15,22 +15,21 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import build_world, emit, probe_accuracy, save_json
-from repro.core.federation import FLConfig, FederatedTrainer
+from benchmarks.common import build_scenario, emit, probe_accuracy, save_json
+from repro.core import scenario as scn
 
 
 def run(iid: bool, aggregator: str, rounds: int, vehicles: int,
         per_round: int, batch: int, n_per_class: int, seed: int = 0):
-    x, y, parts, tree = build_world(vehicles, n_per_class, iid, alpha=0.1,
-                                    seed=seed, min_per_client=40)
-    cfg = FLConfig(n_vehicles=vehicles, vehicles_per_round=per_round,
-                   batch_size=batch, rounds=rounds, aggregator=aggregator,
-                   queue_len=1024, lr=0.5, seed=seed)
-    tr = FederatedTrainer(cfg, tree, [x[p] for p in parts])
+    sc = build_scenario(vehicles, n_per_class, iid, alpha=0.1, seed=seed,
+                        min_per_client=40, aggregator=aggregator,
+                        vehicles_per_round=per_round, batch_size=batch,
+                        rounds=rounds, queue_len=1024, lr=0.5)
     t0 = time.time()
-    hist = tr.run(log_every=0)
+    state, hist = scn.run(sc)
     dt = time.time() - t0
-    acc = probe_accuracy(tr.global_tree, x, y)
+    x, y = sc.dataset
+    acc = probe_accuracy(state.global_tree, x, y)
     return acc, [h["loss"] for h in hist], dt
 
 

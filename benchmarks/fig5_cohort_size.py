@@ -11,22 +11,21 @@ import time
 
 import numpy as np
 
-from benchmarks.common import build_world, emit, probe_accuracy, save_json
-from repro.core.federation import FLConfig, FederatedTrainer
+from benchmarks.common import build_scenario, emit, probe_accuracy, save_json
+from repro.core import scenario as scn
 
 
 def run(per_round: int, local_iters: int, rounds: int, vehicles: int,
         batch: int, n_per_class: int):
-    x, y, parts, tree = build_world(vehicles, n_per_class, iid=False,
-                                    alpha=0.1, min_per_client=40)
-    cfg = FLConfig(n_vehicles=vehicles, vehicles_per_round=per_round,
-                   batch_size=batch, rounds=rounds, local_iters=local_iters,
-                   lr=0.5, seed=0)
-    tr = FederatedTrainer(cfg, tree, [x[p] for p in parts])
+    sc = build_scenario(vehicles, n_per_class, iid=False, alpha=0.1,
+                        min_per_client=40, vehicles_per_round=per_round,
+                        batch_size=batch, rounds=rounds,
+                        local_iters=local_iters, lr=0.5)
     t0 = time.time()
-    hist = tr.run(log_every=0)
+    state, hist = scn.run(sc)
     dt = time.time() - t0
-    early = probe_accuracy(tr.global_tree, x, y)
+    x, y = sc.dataset
+    early = probe_accuracy(state.global_tree, x, y)
     return early, [h["loss"] for h in hist], dt
 
 

@@ -13,19 +13,18 @@ import time
 
 import numpy as np
 
-from benchmarks.common import build_world, emit, save_json
-from repro.core.federation import FLConfig, FederatedTrainer, gradient_std
+from benchmarks.common import build_scenario, emit, save_json
+from repro.core import scenario as scn
+from repro.core.federation import gradient_std
 
 
 def run(aggregator: str, rounds: int, vehicles: int, per_round: int,
         batch: int, n_per_class: int, seed: int):
-    x, y, parts, tree = build_world(vehicles, n_per_class, iid=False,
-                                    alpha=0.1, min_per_client=40, seed=seed)
-    cfg = FLConfig(n_vehicles=vehicles, vehicles_per_round=per_round,
-                   batch_size=batch, rounds=rounds, aggregator=aggregator,
-                   lr=0.5, seed=seed)
-    tr = FederatedTrainer(cfg, tree, [x[p] for p in parts])
-    hist = tr.run(log_every=0)
+    sc = build_scenario(vehicles, n_per_class, iid=False, alpha=0.1,
+                        min_per_client=40, seed=seed, aggregator=aggregator,
+                        vehicles_per_round=per_round, batch_size=batch,
+                        rounds=rounds, lr=0.5)
+    _, hist = scn.run(sc)
     return [h["loss"] for h in hist]
 
 

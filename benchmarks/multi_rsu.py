@@ -23,11 +23,13 @@ import numpy as np
 from common import build_world, emit, save_json
 
 
-def time_rounds(trainer, n_rounds, parallel=True):
-    trainer.round(0, parallel=parallel)    # warmup: compile + first agg
+def time_rounds(scenario, n_rounds, parallel=True):
+    from repro.core.scenario import run_round
+    state = scenario.init_state()
+    state, _ = run_round(state, scenario, parallel=parallel)  # warmup
     t0 = time.perf_counter()
-    for r in range(1, n_rounds + 1):
-        trainer.round(r, parallel=parallel)
+    for _ in range(n_rounds):
+        state, _ = run_round(state, scenario, parallel=parallel)
     return (time.perf_counter() - t0) / n_rounds * 1e6
 
 
@@ -44,7 +46,7 @@ def main():
         ap.error("--rounds must be >= 1")
 
     from repro.core import aggregation as agg
-    from repro.core.federation import FLConfig, FederatedTrainer
+    from repro.core.scenario import Scenario
     from repro.core.topology import HandoverMultiRSU, MultiRSU, SingleRSU
 
     results = {}
@@ -56,12 +58,12 @@ def main():
         for n_rsus in args.rsus:
             if n_rsus > n_vehicles:
                 continue
-            cfg = FLConfig(n_vehicles=24, vehicles_per_round=n_vehicles,
-                           batch_size=args.batch, rounds=args.rounds + 1,
-                           local_iters=1, seed=0)
-            tr = FederatedTrainer(cfg, tree, data,
-                                  topology=MultiRSU(n_rsus=n_rsus))
-            us = time_rounds(tr, args.rounds)
+            base = dict(data=data, global_tree=tree, n_vehicles=24,
+                        vehicles_per_round=n_vehicles,
+                        batch_size=args.batch, rounds=args.rounds + 1,
+                        local_iters=1, seed=0)
+            sc = Scenario(topology=MultiRSU(n_rsus=n_rsus), **base)
+            us = time_rounds(sc, args.rounds)
             emit("topology/multi_rsu/round", us,
                  f"V={n_vehicles};R={n_rsus}")
             sys.stdout.flush()
@@ -69,10 +71,10 @@ def main():
 
             topo = HandoverMultiRSU(n_rsus=n_rsus, rsu_range=500.0,
                                     round_duration=30.0, sync_every=2)
-            tr = FederatedTrainer(cfg, tree, data, topology=topo)
+            sc = Scenario(topology=topo, **base)
             # sequential client path: handover cohort sizes vary per round,
             # so the vmapped path would recompile mid-measurement
-            us = time_rounds(tr, args.rounds, parallel=False)
+            us = time_rounds(sc, args.rounds, parallel=False)
             emit("topology/handover/round", us,
                  f"V={n_vehicles};R={n_rsus}")
             sys.stdout.flush()

@@ -1,9 +1,10 @@
 """Handover demo: vehicles crossing RSU boundaries mid-training.
 
-Runs the HandoverMultiRSU topology on the synthetic vehicular world and
-narrates each round: which RSU every participant downloaded from, where
-it ended up uploading, which uploads were discounted as stale, and when
-the regional server re-synchronized the RSU models.
+Declares a `HandoverMultiRSU` scenario on the synthetic vehicular world
+and narrates each round: which RSU every participant downloaded from,
+where it ended up uploading, which uploads were discounted as stale, and
+when the regional server re-synchronized the RSU models. All motion
+state (positions, per-RSU models, sync stats) lives in `FLState.topo`.
 
   PYTHONPATH=src python examples/handover.py
 """
@@ -15,47 +16,46 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.configs.base import get_config
-from repro.core.federation import FLConfig, FederatedTrainer
-from repro.core.topology import HandoverMultiRSU
-from repro.data.synthetic import make_dataset, partition_dirichlet
-from repro.models.resnet import init_resnet
+from repro.core.scenario import Scenario, run_round
 
 
 def main():
     print("== FLSimCo multi-RSU handover demo ==")
-    x, y = make_dataset(n_per_class=60, seed=0)
-    parts = partition_dirichlet(y, n_clients=8, alpha=0.1,
-                                min_per_client=40, seed=0)
-    cfg = FLConfig(n_vehicles=8, vehicles_per_round=4, batch_size=32,
-                   rounds=6, local_iters=1, lr=0.5, aggregator="flsimco")
-    topo = HandoverMultiRSU(n_rsus=3, rsu_range=500.0, round_duration=12.0,
-                            stale_discount=0.5, sync_every=3)
-    tree = init_resnet(get_config("resnet18-cifar"), jax.random.PRNGKey(0))
-    trainer = FederatedTrainer(cfg, tree, [x[p] for p in parts],
-                               topology=topo)
+    sc = Scenario(topology="handover",
+                  topology_kwargs={"n_rsus": 3, "rsu_range": 500.0,
+                                   "round_duration": 12.0,
+                                   "stale_discount": 0.5, "sync_every": 3},
+                  aggregator="flsimco", partitioner="dirichlet", alpha=0.1,
+                  n_per_class=60, min_per_client=40,
+                  n_vehicles=8, vehicles_per_round=4, batch_size=32,
+                  rounds=6, local_iters=1, lr=0.5)
+    topo = sc.topology
     print(f"road: ring of {topo.road_length:.0f} m, "
           f"{topo.n_rsus} RSUs x {topo.rsu_range:.0f} m coverage, "
-          f"{cfg.n_vehicles} vehicles\n")
+          f"{sc.cfg.n_vehicles} vehicles\n")
 
-    for r in range(cfg.rounds):
-        pos_before = topo.positions.copy()
-        rec = trainer.round(r)
+    state = sc.init_state()
+    history = []
+    for _ in range(sc.cfg.rounds):
+        pos_before = np.asarray(state.topo["positions"])
+        state, rec = run_round(state, sc)
+        history.append(rec)
         # unwrap across the ring boundary: forward distance, not raw delta
-        moved = (topo.positions - pos_before) % topo.road_length
-        print(f"round {r}: loss={rec['loss']:.4f}  "
+        moved = (np.asarray(state.topo["positions"])
+                 - pos_before) % topo.road_length
+        print(f"round {rec['round']}: loss={rec['loss']:.4f}  "
               f"uploads/RSU={rec['rsu_sizes']}  "
               f"handovers={rec['n_handovers']}"
               + ("  [region sync]" if rec["synced"] else ""))
         v = np.asarray(rec["velocities"])
         print(f"  velocities: {np.round(v * 3.6, 1).tolist()} km/h; "
               f"fleet moved {moved.min():.0f}-{moved.max():.0f} m")
-    view = topo.region_view()   # evaluation snapshot (merged RSU models)
+    view = topo.region_view(state)  # evaluation snapshot (merged RSU models)
     n_params = sum(l.size for l in jax.tree.leaves(view))
-    n_total = sum(h["n_handovers"] for h in trainer.history)
+    n_total = sum(h["n_handovers"] for h in history)
     print(f"\nregion model snapshot: {n_params:,} parameters "
           f"merged from {topo.n_rsus} RSUs")
-    print(f"done — {n_total} handovers across {cfg.rounds} rounds; "
+    print(f"done — {n_total} handovers across {sc.cfg.rounds} rounds; "
           f"stale uploads were down-weighted x{topo.stale_discount}, "
           f"region re-synced every {topo.sync_every} rounds.")
 

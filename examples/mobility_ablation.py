@@ -13,15 +13,14 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import dataclasses
-
 import jax
 import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.aggregation import flsimco_weights
-from repro.core.federation import FLConfig, FederatedTrainer, gradient_std
+from repro.core.federation import gradient_std
 from repro.core.mobility import MobilityModel
+from repro.core.scenario import Scenario, run
 from repro.data.synthetic import make_dataset, partition_iid
 from repro.models.resnet import init_resnet
 
@@ -33,9 +32,9 @@ def main():
     ap.add_argument("--n-per-class", type=int, default=50)
     a = ap.parse_args()
 
+    # one world for the whole sweep; the Scenarios share it via data=
     x, y = make_dataset(n_per_class=a.n_per_class, seed=0)
-    parts = partition_iid(y, a.vehicles)
-    data = [x[p] for p in parts]
+    data = [x[p] for p in partition_iid(y, a.vehicles)]
     tree = init_resnet(get_config("resnet18-cifar"), jax.random.PRNGKey(0))
 
     for mu in (20.0, 29.17, 38.0):
@@ -50,11 +49,11 @@ def main():
         print(f"  Eq.11 weight spread (5 vehicles): "
               f"{w.min():.3f}..{w.max():.3f}")
         for agg in ("flsimco", "fedavg"):
-            cfg = FLConfig(n_vehicles=a.vehicles, vehicles_per_round=4,
-                           batch_size=32, rounds=a.rounds, aggregator=agg,
-                           lr=0.5, seed=0)
-            tr = FederatedTrainer(cfg, tree, data, mobility=mob)
-            hist = tr.run(log_every=0)
+            sc = Scenario(aggregator=agg, mobility=mob, data=data,
+                          global_tree=tree,
+                          n_vehicles=a.vehicles, vehicles_per_round=4,
+                          batch_size=32, rounds=a.rounds, lr=0.5, seed=0)
+            _, hist = run(sc)
             losses = [h["loss"] for h in hist]
             print(f"  {agg:8s}: losses {[f'{l:.3f}' for l in losses]} "
                   f"grad_std={gradient_std(losses):.4f}")

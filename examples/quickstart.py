@@ -1,8 +1,9 @@
 """Quickstart: one FLSimCo round, end to end, in under a minute on CPU.
 
-Builds the synthetic vehicular dataset, runs a round of federated
-dual-temperature SSL with blur-weighted aggregation, and prints the loss
-and the Eq.-11 weights that the RSU assigned to each vehicle.
+Declares the experiment as a `Scenario` (synthetic vehicular dataset,
+Dirichlet Non-IID split, blur-weighted aggregation), runs pure rounds
+over an explicit `FLState`, and prints the loss and the Eq.-11 weights
+that the RSU assigned to each vehicle.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,34 +12,29 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import numpy as np
 
-from repro.configs.base import get_config
 from repro.core.aggregation import flsimco_weights
-from repro.core.federation import FLConfig, FederatedTrainer
 from repro.core.mobility import MobilityModel
-from repro.data.synthetic import make_dataset, partition_dirichlet
-from repro.models.resnet import init_resnet
+from repro.core.scenario import Scenario, run_round
 
 
 def main():
     print("== FLSimCo quickstart ==")
-    x, y = make_dataset(n_per_class=60, seed=0)
-    parts = partition_dirichlet(y, n_clients=8, alpha=0.1,
-                                min_per_client=40, seed=0)
-    print(f"dataset: {len(x)} images, 8 vehicles (Dirichlet 0.1 Non-IID)")
+    sc = Scenario(topology="single", aggregator="flsimco", client="dtssl",
+                  partitioner="dirichlet", alpha=0.1, n_per_class=60,
+                  min_per_client=40,
+                  n_vehicles=8, vehicles_per_round=4, batch_size=32,
+                  rounds=2, local_iters=1, lr=0.5)
+    print(f"dataset: {len(sc.dataset[0])} images, "
+          f"{sc.cfg.n_vehicles} vehicles (Dirichlet 0.1 Non-IID)")
 
-    cfg = FLConfig(n_vehicles=8, vehicles_per_round=4, batch_size=32,
-                   rounds=2, local_iters=1, lr=0.5, aggregator="flsimco")
-    tree = init_resnet(get_config("resnet18-cifar"), jax.random.PRNGKey(0))
-    trainer = FederatedTrainer(cfg, tree, [x[p] for p in parts])
-
-    for r in range(cfg.rounds):
-        rec = trainer.round(r)
+    state = sc.init_state()
+    for _ in range(sc.cfg.rounds):
+        state, rec = run_round(state, sc)
         v = np.asarray(rec["velocities"])
         w = np.asarray(flsimco_weights(MobilityModel().blur_level(v)))
-        print(f"round {r}: DT loss = {rec['loss']:.4f}")
+        print(f"round {rec['round']}: DT loss = {rec['loss']:.4f}")
         for i, (vi, wi) in enumerate(zip(v, w)):
             tag = " (blurred)" if vi > 27.78 else ""
             print(f"  vehicle {i}: v = {vi*3.6:6.1f} km/h -> "

@@ -1,0 +1,69 @@
+"""Checkpoint/resume demo + smoke check: pause-at-round-k is free.
+
+Runs the same `Scenario` twice — once straight through, once saving the
+full `FLState` at round k, restoring it from disk, and continuing — and
+verifies the two end states are BIT-identical (model, RNG streams, and
+round records all live in the state, so resuming loses nothing).
+
+CI runs this as the resume-smoke step; it exits non-zero on any mismatch.
+
+  PYTHONPATH=src python examples/resume.py --rounds 4 --save-at 2
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import restore_state, save_state
+from repro.core.scenario import Scenario, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--save-at", type=int, default=2)
+    ap.add_argument("--topology", default="single")
+    a = ap.parse_args()
+    assert 0 < a.save_at < a.rounds, "--save-at must fall inside --rounds"
+
+    topo_kwargs = {"handover": {"n_rsus": 2, "rsu_range": 300.0,
+                                "round_duration": 30.0, "sync_every": 2},
+                   "multi": {"n_rsus": 2}}.get(a.topology, {})
+    sc = Scenario(topology=a.topology, topology_kwargs=topo_kwargs,
+                  partitioner="iid", n_per_class=30,
+                  n_vehicles=6, vehicles_per_round=2, batch_size=16,
+                  rounds=a.rounds, lr=0.5)
+
+    print(f"straight run: {a.rounds} rounds of {a.topology}")
+    straight, hist_straight = run(sc, rounds=a.rounds)
+
+    print(f"paused run: {a.save_at} rounds + save + restore + "
+          f"{a.rounds - a.save_at} rounds")
+    mid, hist_a = run(sc, rounds=a.save_at)
+    with tempfile.TemporaryDirectory() as d:
+        path = save_state(os.path.join(d, f"ckpt_{mid.round}.npz"), mid)
+        print(f"  saved FLState at round {mid.round} "
+              f"({os.path.getsize(path)/1e6:.1f} MB), restoring...")
+        resumed_state = restore_state(path)
+    resumed, hist_b = run(sc, resumed_state, rounds=a.rounds - a.save_at)
+
+    mismatches = [
+        i for i, (x, y) in enumerate(zip(jax.tree.leaves(straight.to_tree()),
+                                         jax.tree.leaves(resumed.to_tree())))
+        if not np.array_equal(np.asarray(x), np.asarray(y))]
+    if mismatches or hist_straight != hist_a + hist_b:
+        print(f"MISMATCH: leaves {mismatches}, "
+              f"history equal: {hist_straight == hist_a + hist_b}")
+        sys.exit(1)
+    losses = [f"{h['loss']:.4f}" for h in hist_straight]
+    print(f"losses: {losses}")
+    print("resume is bit-identical to the uninterrupted run ✓")
+
+
+if __name__ == "__main__":
+    main()

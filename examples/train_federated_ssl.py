@@ -1,13 +1,15 @@
 """End-to-end driver: federated SSL pre-training + probe evaluation.
 
-The paper's full experiment at configurable scale. Defaults run a short
+The paper's full experiment at configurable scale, declared as a
+`Scenario` and driven through pure rounds. Defaults run a short
 CPU-sized configuration; ``--preset paper`` reproduces Table 1 (95
 vehicles, 520+ images each, batch 512, 150 rounds — hours on CPU).
 
   PYTHONPATH=src python examples/train_federated_ssl.py \
       --rounds 10 --vehicles 10 --aggregator flsimco --noniid
 
-Checkpoints land in ./checkpoints/<run-name>/ and can be resumed.
+Checkpoints are FULL `FLState` snapshots (model + RNG streams + round),
+so ``--resume`` continues bit-identically to a run that never paused.
 """
 import argparse
 import os
@@ -15,15 +17,14 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import numpy as np
 
-from repro.checkpoint.store import latest, restore, save
-from repro.configs.base import get_config
-from repro.core.federation import FLConfig, FederatedTrainer, gradient_std
+from repro.checkpoint.store import latest, restore_state, save_state
+from repro.core.aggregation import AGGREGATORS
+from repro.core.federation import gradient_std
+from repro.core.scenario import Scenario, run_round
 from repro.data.synthetic import make_dataset, partition_dirichlet, partition_iid
 from repro.eval.probe import encode, knn_top1, linear_probe_top1
-from repro.models.resnet import init_resnet
 
 
 def main():
@@ -37,10 +38,14 @@ def main():
     ap.add_argument("--n-per-class", type=int, default=100)
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--aggregator", default="flsimco",
-                    choices=["flsimco", "fedavg", "discard", "fedco"])
+                    choices=sorted(AGGREGATORS) + ["fedco"])
+    ap.add_argument("--client", default=None, choices=["dtssl", "fedco"])
+    ap.add_argument("--topology", default="single",
+                    choices=["single", "multi", "handover"])
     ap.add_argument("--noniid", action="store_true")
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--ckpt-dir", default="checkpoints/fl_ssl")
+    ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--probe", default="knn", choices=["knn", "linear"])
     a = ap.parse_args()
@@ -53,45 +58,54 @@ def main():
     split = int(0.85 * len(x))
     xtr, ytr, xte, yte = x[:split], y[:split], x[split:], y[split:]
     if a.noniid:
-        parts = partition_dirichlet(ytr, a.vehicles, a.alpha,
-                                    min_per_client=min(520, len(xtr) // a.vehicles),
-                                    seed=0)
+        parts = partition_dirichlet(
+            ytr, a.vehicles, a.alpha,
+            min_per_client=min(520, len(xtr) // a.vehicles), seed=0)
     else:
         parts = partition_iid(ytr, a.vehicles)
 
-    cfg = FLConfig(n_vehicles=a.vehicles, vehicles_per_round=a.per_round,
-                   batch_size=a.batch, rounds=a.rounds,
-                   local_iters=a.local_iters, lr=a.lr,
-                   aggregator=a.aggregator)
-    tree = init_resnet(get_config("resnet18-cifar"), jax.random.PRNGKey(0))
+    sc = Scenario(topology=a.topology, aggregator=a.aggregator,
+                  client=a.client, data=[xtr[p] for p in parts],
+                  n_vehicles=a.vehicles, vehicles_per_round=a.per_round,
+                  batch_size=a.batch, rounds=a.rounds,
+                  local_iters=a.local_iters, lr=a.lr)
 
-    start = 0
-    if a.resume and latest(a.ckpt_dir):
-        path, start = latest(a.ckpt_dir)
-        _, tree = restore(path, tree)
-        print(f"resumed from {path} (round {start})")
+    state = None
+    if a.resume:
+        found = latest(a.ckpt_dir)
+        if found:
+            state = restore_state(found[0], scenario=sc)
+            print(f"resumed full FLState from {found[0]} "
+                  f"(round {state.round})")
+    if state is None:
+        state = sc.init_state()
 
-    trainer = FederatedTrainer(cfg, tree, [xtr[p] for p in parts])
-    for r in range(start, a.rounds):
-        rec = trainer.round(r)
+    history = []
+    while state.round < a.rounds:
+        state, rec = run_round(state, sc)
+        history.append(rec)
+        r = rec["round"]
         if r % 5 == 0 or r == a.rounds - 1:
-            print(f"[{a.aggregator}] round {r:4d} loss={rec['loss']:.4f}")
-        if (r + 1) % 25 == 0:
-            save(os.path.join(a.ckpt_dir, f"ckpt_{r+1}.npz"), r + 1,
-                 trainer.global_tree)
+            print(f"[{sc.cfg.aggregator}/{sc.cfg.client}] round {r:4d} "
+                  f"loss={rec['loss']:.4f}")
+        if state.round % a.ckpt_every == 0:
+            save_state(os.path.join(a.ckpt_dir,
+                                    f"ckpt_{state.round}.npz"), state,
+                       scenario=sc)
 
-    losses = [h["loss"] for h in trainer.history]
-    print(f"gradient std of loss curve: {gradient_std(losses):.4f}")
+    losses = [h["loss"] for h in history]
+    if len(losses) > 1:
+        print(f"gradient std of loss curve: {gradient_std(losses):.4f}")
 
-    f_tr = encode(trainer.global_tree, xtr[:2000])
-    f_te = encode(trainer.global_tree, xte[:1000])
+    f_tr = encode(state.global_tree, xtr[:2000])
+    f_te = encode(state.global_tree, xte[:1000])
     if a.probe == "knn":
         acc = knn_top1(f_tr, ytr[:2000], f_te, yte[:1000])
     else:
         acc = linear_probe_top1(f_tr, ytr[:2000], f_te, yte[:1000])
     print(f"{a.probe} probe top-1: {acc:.4f}")
-    save(os.path.join(a.ckpt_dir, "ckpt_final.npz"), a.rounds,
-         trainer.global_tree)
+    save_state(os.path.join(a.ckpt_dir, f"ckpt_{state.round}.npz"),
+               state, scenario=sc)
 
 
 if __name__ == "__main__":

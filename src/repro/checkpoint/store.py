@@ -1,15 +1,27 @@
-"""Pytree checkpointing: npz round-trip with structure metadata.
+"""Pytree checkpointing: npz round-trip with *structural* metadata.
 
 save(path, step, tree) / restore(path) -> (step, tree); `latest(dir)`
-follows the LATEST pointer the saver maintains. Works for arbitrary nested
-dict/list/tuple pytrees of jax/numpy arrays (params, optimizer state,
-MoCo queues, FL round metadata).
+follows the LATEST pointer the saver maintains. Works for arbitrary
+nested dict/list/tuple/None pytrees of jax/numpy arrays (params,
+optimizer state, MoCo queues, full `FLState` payloads via
+`FLState.to_tree()`).
+
+The tree *structure* is serialized alongside the leaves (a JSON spec
+mapping container nesting to leaf indices), so `restore(path)` rebuilds
+the exact dict/list/tuple nesting with no example tree. Passing
+`restore(path, like)` additionally validates leaf shapes against `like`
+and reuses its treedef — the only way to round-trip custom node types
+(e.g. NamedTuples), which the structural spec records as plain tuples.
+
+Scalar/bool/int leaves round-trip as numpy arrays of their exact dtype
+(int64 stays int64, float64 stays float64 — host-RNG state survives
+bit-for-bit); bfloat16 & friends are stored as raw bits + a dtype tag.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
@@ -18,6 +30,37 @@ import numpy as np
 def _flatten(tree) -> Tuple[list, Any]:
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
+
+
+def _spec(tree, n_leaves: list) -> Any:
+    """JSON-able structural spec. Leaf numbering follows jax.tree.flatten
+    order (dicts iterate in sorted-key order, sequences in order, None is
+    an empty subtree) so the spec indexes the same `leaf_i` arrays."""
+    if tree is None:
+        return {"t": "none"}
+    if isinstance(tree, dict):
+        keys = sorted(tree)
+        return {"t": "dict", "k": keys,
+                "c": [_spec(tree[k], n_leaves) for k in keys]}
+    if isinstance(tree, (list, tuple)):
+        kind = "list" if isinstance(tree, list) else "tuple"
+        return {"t": kind, "c": [_spec(x, n_leaves) for x in tree]}
+    n_leaves[0] += 1
+    return {"t": "leaf", "i": n_leaves[0] - 1}
+
+
+def _unspec(spec, leaves) -> Any:
+    t = spec["t"]
+    if t == "none":
+        return None
+    if t == "dict":
+        return {k: _unspec(c, leaves) for k, c in zip(spec["k"], spec["c"])}
+    if t == "list":
+        return [_unspec(c, leaves) for c in spec["c"]]
+    if t == "tuple":
+        return tuple(_unspec(c, leaves) for c in spec["c"])
+    assert t == "leaf", t
+    return leaves[spec["i"]]
 
 
 def save(path: str, step: int, tree) -> str:
@@ -33,38 +76,61 @@ def save(path: str, step: int, tree) -> str:
                 str(l.dtype).encode(), dtype=np.uint8)
         else:
             arrays[f"leaf_{i}"] = a
+    n = [0]
+    spec = _spec(tree, n)
+    if n[0] == len(leaves):
+        arrays["__spec__"] = np.frombuffer(json.dumps(spec).encode(),
+                                           dtype=np.uint8)
+    # else: a custom registered node made the structural walk disagree with
+    # jax's flatten — omit the spec so restore(path) fails actionably and
+    # restore(path, like) remains the (still-correct) path for such trees
     np.savez(path, __step__=np.int64(step),
              __treedef__=np.frombuffer(str(treedef).encode(), dtype=np.uint8),
              **arrays)
-    # structure is reconstructed from an example tree at restore; we also
-    # store the treedef repr for sanity checks
     d = os.path.dirname(path) or "."
     with open(os.path.join(d, "LATEST"), "w") as f:
         json.dump({"path": os.path.basename(path), "step": step}, f)
     return path
 
 
-def restore(path: str, like) -> Tuple[int, Any]:
-    """Restore into the structure of `like` (an example pytree)."""
+def _load_leaf(z, i: int):
+    import jax.numpy as jnp
+    a = z[f"leaf_{i}"]
+    if f"dtype_{i}" in z:
+        dt = jnp.dtype(bytes(z[f"dtype_{i}"]).decode())
+        return jnp.asarray(a).view(dt)
+    # plain numpy: int64/float64 leaves (round counters, RNG state) must
+    # not be narrowed by jnp's default-x32 conversion
+    return a
+
+
+def restore(path: str, like: Any = None) -> Tuple[int, Any]:
+    """Restore a checkpoint.
+
+    With `like=None` (default) the structure is rebuilt from the stored
+    structural spec. With an example pytree, leaves are validated against
+    `like`'s shapes and re-hung on `like`'s treedef (use this for custom
+    node types the spec cannot express).
+    """
     if not path.endswith(".npz"):
         path = path + ".npz"
     z = np.load(path)
     step = int(z["__step__"])
+    if like is None:
+        if "__spec__" not in z:
+            raise ValueError(
+                f"{path} predates structural specs; pass an example tree "
+                "via restore(path, like)")
+        spec = json.loads(bytes(z["__spec__"]).decode())
+        n = sum(1 for k in z.files if k.startswith("leaf_"))
+        leaves = [_load_leaf(z, i) for i in range(n)]
+        return step, _unspec(spec, leaves)
     leaves, treedef = _flatten(like)
-    import jax.numpy as jnp
-    new_leaves = []
-    for i in range(len(leaves)):
-        a = z[f"leaf_{i}"]
-        if f"dtype_{i}" in z:
-            dt = jnp.dtype(bytes(z[f"dtype_{i}"]).decode())
-            a = jnp.asarray(a).view(dt)
-        else:
-            a = jnp.asarray(a)
-        new_leaves.append(a)
+    new_leaves = [_load_leaf(z, i) for i in range(len(leaves))]
     for i, (old, new) in enumerate(zip(leaves, new_leaves)):
-        if tuple(np.shape(old)) != tuple(new.shape):
+        if tuple(np.shape(old)) != tuple(np.shape(new)):
             raise ValueError(f"checkpoint leaf {i} shape mismatch: "
-                             f"{np.shape(old)} vs {new.shape}")
+                             f"{np.shape(old)} vs {np.shape(new)}")
     return step, jax.tree.unflatten(treedef, new_leaves)
 
 
@@ -75,3 +141,58 @@ def latest(ckpt_dir: str):
     with open(p) as f:
         meta = json.load(f)
     return os.path.join(ckpt_dir, meta["path"]), meta["step"]
+
+
+# -- FLState convenience ----------------------------------------------------
+
+def _scenario_fingerprint(scenario) -> dict:
+    import dataclasses
+    return {"cfg": dataclasses.asdict(scenario.cfg),
+            "topology": scenario.topology.name}
+
+
+def save_state(path: str, state, scenario=None) -> str:
+    """Checkpoint a full `FLState` (core/state.py) at its current round.
+
+    Pass the `Scenario` to stamp the checkpoint with an experiment
+    fingerprint (FLConfig fields + topology name); `restore_state` then
+    refuses to resume it under a different experiment.
+    """
+    p = save(path, state.round, state.to_tree())
+    if scenario is not None:
+        # sidecar written next to the npz (np.savez has no extra-JSON slot)
+        npz = p if p.endswith(".npz") else p + ".npz"
+        with open(npz + ".meta.json", "w") as f:
+            json.dump(_scenario_fingerprint(scenario), f)
+    return p
+
+
+def restore_state(path: str, scenario=None):
+    """Rebuild an `FLState` from a `save_state` checkpoint — structural,
+    no example tree needed. Returns the state (its round is the step).
+
+    With `scenario`, validates the stored experiment fingerprint (when
+    one exists) so a checkpoint from a different client/aggregator/
+    topology/schedule fails loudly instead of silently continuing a
+    mixed experiment.
+    """
+    from repro.core.state import FLState
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    if scenario is not None:
+        meta_path = path + ".meta.json"
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                stored = json.load(f)
+            want = _scenario_fingerprint(scenario)
+            if stored != want:
+                diff = [k for k in want["cfg"]
+                        if stored["cfg"].get(k) != want["cfg"][k]]
+                if stored["topology"] != want["topology"]:
+                    diff.append("topology")
+                raise ValueError(
+                    f"checkpoint {path} was written by a different "
+                    f"experiment (mismatched: {diff}); refusing to resume. "
+                    f"Pass scenario=None to override.")
+    _, tree = restore(path)
+    return FLState.from_tree(tree)

@@ -10,16 +10,26 @@ Two implementations of each scheme:
   all-reduce — the TPU-native production form used by launch/steps.py.
   Equivalence of the two is covered by tests/test_aggregation.py.
 
-Registry (``AGGREGATORS``, the names ``FLConfig.aggregator`` accepts):
+Registry (``AGGREGATORS``, the names ``FLConfig.aggregator`` accepts).
+Every entry has the uniform dispatch signature
+
+    aggregate(client_trees, velocities, blur, cfg) -> tree
+
+so topologies (core/topology.py) route Step 4 through the registry with
+zero per-scheme branching; the underlying ``aggregate_*`` functions keep
+their minimal signatures for direct use.
+
   flsimco  — blur-weighted (Eq. 11), weight_n ∝ (ΣL − L_n)/ΣL — the paper
-  fedavg   — baseline1: uniform average (McMahan et al.), optionally
-             data-size weighted
-  discard  — baseline2: drop clients above the blur threshold, then fedavg
-  fedco    — baseline3: FedAvg parameters + the FedCo global negative
-             queue; handled by the trainer (queue logic in core/ssl.py),
-             so it has no entry here
+  fedavg   — baseline1: uniform average (McMahan et al.)
+  discard  — baseline2: drop clients above cfg.blur_threshold, then fedavg
   softmax  — beyond-paper: w ∝ softmax(−L/T), scale-free in N
   inverse  — beyond-paper: w ∝ 1/(L+eps), inverse-variance-flavored
+
+(The paper's baseline3, FedCo, is not an aggregation scheme but a client
+*algorithm* — FedAvg parameters + a global negative queue — and lives in
+the ``CLIENT_UPDATES`` registry, core/clients.py. ``aggregator="fedco"``
+is accepted as a legacy alias that FLConfig normalizes to
+``client="fedco", aggregator="fedavg"``.)
 
 Host-side weighted sums route through the fused Pallas kernel
 (kernels/wagg.py) on TPU — one HBM pass over N stacked models instead of
@@ -171,12 +181,39 @@ def aggregate_inverse(trees: Sequence, blur_levels, eps: float = 1.0):
     return _weighted_tree_sum(trees, inverse_weights(blur_levels, eps))
 
 
+# Uniform dispatch signature: (client_trees, velocities, blur, cfg).
+# `velocities`/`blur` are per-client arrays; `cfg` supplies the scheme's
+# knobs (normalize_weights, blur_threshold). FLConfig validates its
+# `aggregator` field against this dict, so adding an entry here is the
+# whole story for a new scheme.
+
+def _disp_flsimco(trees, velocities, blur, cfg):
+    return aggregate_flsimco(trees, blur,
+                             getattr(cfg, "normalize_weights", True))
+
+
+def _disp_fedavg(trees, velocities, blur, cfg):
+    return aggregate_fedavg(trees)
+
+
+def _disp_discard(trees, velocities, blur, cfg):
+    return aggregate_discard(trees, velocities, cfg.blur_threshold)
+
+
+def _disp_softmax(trees, velocities, blur, cfg):
+    return aggregate_softmax(trees, blur)
+
+
+def _disp_inverse(trees, velocities, blur, cfg):
+    return aggregate_inverse(trees, blur)
+
+
 AGGREGATORS = {
-    "flsimco": aggregate_flsimco,
-    "fedavg": aggregate_fedavg,
-    "discard": aggregate_discard,
-    "softmax": aggregate_softmax,
-    "inverse": aggregate_inverse,
+    "flsimco": _disp_flsimco,
+    "fedavg": _disp_fedavg,
+    "discard": _disp_discard,
+    "softmax": _disp_softmax,
+    "inverse": _disp_inverse,
 }
 
 

@@ -1,0 +1,237 @@
+"""Client update algorithms — the ``CLIENT_UPDATES`` registry.
+
+The paper compares two client-side algorithms under the same federated
+round structure: FLSimCo's dual-temperature SSL (Sec. 4 Step 2) and the
+FedCo MoCo baseline (momentum key encoder + global negative queue). The
+old trainer special-cased FedCo by string comparison
+(``aggregator == "fedco"`` + a private ``_round_fedco``); here both are
+entries in one registry with one signature, so every topology runs any
+client algorithm through the same three hooks:
+
+  init_state(cfg, global_tree)           -> client_state pytree (or None)
+  run_cohort(cfg, tree, client_state,
+             batches, keys, lr, parallel) -> (client_trees, losses, uploads)
+  finalize(cfg, client_state,
+           aggregated_tree, uploads)      -> new client_state
+
+`uploads` is whatever extra payload the vehicles send besides parameters
+(FedCo: the k-value batches the RSU merges into the global queue; DT-SSL:
+nothing). Aggregation of the parameter trees themselves is the
+topology's job, through the ``AGGREGATORS`` registry — client algorithm
+and aggregation scheme are orthogonal axes of a `Scenario`.
+
+Jitted client steps are cached per (hyperparameter tuple), not per
+trainer, so seed/aggregator/round-count sweeps reuse one compilation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ssl
+from repro.core.dt_loss import dt_loss_matrix, info_nce_loss
+from repro.core.state import FLConfig
+from repro.models.resnet import resnet_apply
+from repro.optim.optimizers import sgd
+
+
+# --------------------------------------------------------------------------
+# per-client local training (ResNet / images)
+# --------------------------------------------------------------------------
+
+def _client_loss(tree, cfg: FLConfig, images, key):
+    """pi1/pi2 views -> encoder -> DT loss. Returns (loss, new_tree)."""
+    k1, k2 = jax.random.split(key)
+    v1 = ssl.pi1(k1, images)
+    v2 = ssl.pi2(k2, images)
+    q, _, tree1 = resnet_apply(tree, v1, train=True)
+    k, _, tree2 = resnet_apply(tree1, v2, train=True)
+    loss = dt_loss_matrix(q, k, cfg.tau_alpha, cfg.tau_beta)
+    return loss, tree2
+
+
+def make_local_train_step(cfg: FLConfig):
+    opt_init, opt_update = sgd(cfg.momentum, cfg.weight_decay)
+
+    def local_train(tree, images, key, lr):
+        """cfg.local_iters SGD steps on one client. Returns (tree, loss).
+
+        The iteration loop is a *python* unroll, not lax.scan: XLA-CPU
+        pessimizes convolutions inside while-loops (~25x slower measured),
+        and local_iters is 1-2 in the paper.
+        """
+        opt_state = opt_init(tree["params"])
+        losses = []
+        for k in jax.random.split(key, cfg.local_iters):
+            tree_c = tree
+
+            def loss_fn(params):
+                t = {"params": params, "state": tree_c["state"]}
+                loss, t2 = _client_loss(t, cfg, images, k)
+                return loss, t2["state"]
+
+            (loss, new_state), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(tree_c["params"])
+            new_params, opt_state = opt_update(tree_c["params"], grads,
+                                               opt_state, lr)
+            tree = {"params": new_params, "state": new_state}
+            losses.append(loss)
+        return tree, jnp.stack(losses).mean()
+
+    return local_train
+
+
+def make_moco_local_train_step(cfg: FLConfig):
+    """FedCo client: InfoNCE against the (global) queue, EMA key encoder."""
+    opt_init, opt_update = sgd(cfg.momentum, cfg.weight_decay)
+
+    def local_train(tree, key_tree, queue, images, key, lr):
+        # python unroll (see make_local_train_step for the XLA-CPU rationale)
+        opt_state = opt_init(tree["params"])
+        losses, kvec = [], None
+        for k in jax.random.split(key, cfg.local_iters):
+            k1, k2 = jax.random.split(k)
+            v1 = ssl.pi1(k1, images)
+            v2 = ssl.pi2(k2, images)
+            tree_c, key_tree_c = tree, key_tree
+
+            def loss_fn(params):
+                t = {"params": params, "state": tree_c["state"]}
+                q, _, t2 = resnet_apply(t, v1, train=True)
+                kv, _, _ = resnet_apply(key_tree_c, v2, train=False)
+                kv = jax.lax.stop_gradient(kv)
+                return info_nce_loss(q, kv, queue), (t2["state"], kv)
+
+            (loss, (new_state, kvec)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(tree_c["params"])
+            new_params, opt_state = opt_update(tree_c["params"], grads,
+                                               opt_state, lr)
+            tree = {"params": new_params, "state": new_state}
+            key_tree = {
+                "params": ssl.momentum_update(key_tree_c["params"], new_params,
+                                              cfg.moco_momentum),
+                "state": new_state,
+            }
+            losses.append(loss)
+        return tree, key_tree, kvec, jnp.stack(losses).mean()
+
+    return local_train
+
+
+# --------------------------------------------------------------------------
+# shared jit caches (keyed on exactly the fields the step closes over)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def _cached_local_steps(local_iters, momentum, weight_decay,
+                        tau_alpha, tau_beta):
+    f = make_local_train_step(FLConfig(
+        local_iters=local_iters, momentum=momentum,
+        weight_decay=weight_decay, tau_alpha=tau_alpha, tau_beta=tau_beta))
+    return jax.jit(f), jax.jit(jax.vmap(f, in_axes=(0, 0, 0, None)))
+
+
+def _jitted_local_steps(cfg: FLConfig):
+    return _cached_local_steps(cfg.local_iters, cfg.momentum,
+                               cfg.weight_decay, cfg.tau_alpha, cfg.tau_beta)
+
+
+@functools.lru_cache(maxsize=16)
+def _cached_moco_step(local_iters, momentum, weight_decay, moco_momentum):
+    return jax.jit(make_moco_local_train_step(FLConfig(
+        local_iters=local_iters, momentum=momentum,
+        weight_decay=weight_decay, moco_momentum=moco_momentum)))
+
+
+def _jitted_moco_step(cfg: FLConfig):
+    return _cached_moco_step(cfg.local_iters, cfg.momentum,
+                             cfg.weight_decay, cfg.moco_momentum)
+
+
+# --------------------------------------------------------------------------
+# registry entries
+# --------------------------------------------------------------------------
+
+class DTSSLClient:
+    """FLSimCo Step 2: dual-temperature contrastive SSL. Stateless."""
+
+    name = "dtssl"
+
+    def init_state(self, cfg: FLConfig, global_tree):
+        return None
+
+    def run_cohort(self, cfg: FLConfig, tree, client_state, batches, keys,
+                   lr, parallel: bool = True):
+        """Run one cohort of clients from init model `tree`.
+
+        `parallel=True` vmaps the cohort over a stacked tree; the
+        sequential path is tested equivalent (tests/test_federation.py).
+        """
+        local, vlocal = _jitted_local_steps(cfg)
+        n = len(keys)
+        if parallel:
+            stacked = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+            trees, losses = vlocal(stacked, batches, jnp.stack(keys), lr)
+            client_trees = [jax.tree.map(lambda x: x[i], trees)
+                            for i in range(n)]
+            losses = [float(l) for l in np.asarray(losses)]
+        else:
+            client_trees, losses = [], []
+            for i in range(n):
+                t, l = local(tree, batches[i], keys[i], lr)
+                client_trees.append(t)
+                losses.append(float(l))
+        return client_trees, losses, None
+
+    def finalize(self, cfg: FLConfig, client_state, aggregated_tree, uploads):
+        return None
+
+
+class FedCoClient:
+    """FedCo baseline: MoCo with a *global* negative queue.
+
+    Vehicles upload k-values alongside parameters; the RSU merges them
+    into the global queue (`ssl.fedco_merge_queues`) and resets the key
+    encoder to the aggregated model — exactly the protocol FLSimCo
+    criticizes (Sec. 2: mixed-encoder negatives, representation leakage).
+    """
+
+    name = "fedco"
+
+    def init_state(self, cfg: FLConfig, global_tree):
+        queue = jax.random.normal(
+            jax.random.PRNGKey(cfg.seed + 1),
+            (cfg.queue_len, cfg.feature_dim))
+        queue = queue / jnp.linalg.norm(queue, axis=-1, keepdims=True)
+        return {"key_tree": jax.tree.map(jnp.copy, global_tree),
+                "queue": queue}
+
+    def run_cohort(self, cfg: FLConfig, tree, client_state, batches, keys,
+                   lr, parallel: bool = True):
+        # sequential by design: the MoCo step threads a key-encoder EMA
+        # whose updates are not batchable across clients
+        moco = _jitted_moco_step(cfg)
+        client_trees, losses, kvecs = [], [], []
+        for i in range(len(keys)):
+            t, _, kv, loss = moco(tree, client_state["key_tree"],
+                                  client_state["queue"], batches[i],
+                                  keys[i], lr)
+            client_trees.append(t)
+            losses.append(float(loss))
+            kvecs.append(kv)
+        return client_trees, losses, kvecs
+
+    def finalize(self, cfg: FLConfig, client_state, aggregated_tree, uploads):
+        return {"key_tree": jax.tree.map(jnp.copy, aggregated_tree),
+                "queue": ssl.fedco_merge_queues(client_state["queue"],
+                                                uploads)}
+
+
+CLIENT_UPDATES = {
+    "dtssl": DTSSLClient(),
+    "fedco": FedCoClient(),
+}

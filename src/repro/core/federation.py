@@ -1,331 +1,120 @@
-"""Federated orchestration — FLSimCo Sec. 4 Steps 1-4.
+"""Federated orchestration — FLSimCo Sec. 4 Steps 1-4 (legacy shim).
 
-One `FederatedTrainer` drives the full loop of the paper:
+The simulation API is the pure one in `core/scenario.py`:
 
-  Step 1  RSU initializes the global model
-  Step 2  each participating vehicle downloads it, applies pi1/pi2 to its
-          local (velocity-blurred) images, and runs `local_iters` SGD steps
-          on the dual-temperature loss
-  Step 3  vehicles upload parameters + velocity
-  Step 4  the RSU aggregates with the selected scheme (see the
-          ``AGGREGATORS`` registry in core/aggregation.py: flsimco /
-          fedavg / discard / softmax / inverse, plus the trainer-handled
-          fedco) and the next round begins
+    sc = Scenario(topology=..., aggregator=..., client=..., ...)
+    state = sc.init_state()                  # explicit FLState
+    state, rec = run_round(state, sc)        # pure: state in -> state out
 
-The *shape* of a round — how many RSUs there are, which vehicles talk to
-which RSU, and how RSU models merge — is delegated to a pluggable
-`Topology` (core/topology.py): `SingleRSU` (paper-exact, the default),
-`MultiRSU` (hierarchical two-level Eq. 11), and `HandoverMultiRSU`
-(vehicles migrate between RSU coverage ranges mid-training). The trainer
-keeps the client-side machinery: sampling, batching, blur, and the local
-SGD steps.
+with `FLState` (core/state.py) carrying the RSU model, both RNG streams,
+the round counter, per-topology vehicle state, and per-client-algorithm
+state (FedCo key-tree + queue); client algorithms live in the
+``CLIENT_UPDATES`` registry (core/clients.py) and aggregation schemes in
+``AGGREGATORS`` (core/aggregation.py).
 
-Clients within a cohort are executed with ``jax.vmap`` over a stacked
-parameter tree — the same "cohorts in parallel" dataflow the production
-mesh uses (launch/steps.py), just with the batch axis instead of mesh
-axes. A sequential python path is kept for readability/debugging and is
-tested equivalent.
+`FederatedTrainer` survives here as a thin back-compat shim that threads
+an `FLState` through that API and accumulates history — no round logic
+of its own. New code should use `Scenario`/`run_round` directly; the
+shim exists so pre-redesign drivers keep working unchanged.
 
-Supports both the paper's ResNet backbone (images) and any token
-architecture from the zoo (token views), per DESIGN.md §2.
+This module also re-exports the config/state types and the client local
+train-step constructors so historical import paths
+(`from repro.core.federation import FLConfig, make_local_train_step, ...`)
+keep resolving.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from dataclasses import dataclass
-from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation as agg
-from repro.core import ssl
-from repro.core.dt_loss import dt_loss_matrix, info_nce_loss
-from repro.core.mobility import KMH_100, MobilityModel, apply_motion_blur
+from repro.core.clients import (CLIENT_UPDATES, make_local_train_step,
+                                make_moco_local_train_step)
+from repro.core.mobility import MobilityModel
+from repro.core.scenario import Scenario, run_round
+from repro.core.state import FLConfig, FLState
 from repro.core.topology import SingleRSU, Topology
-from repro.models.resnet import resnet_apply
-from repro.optim.optimizers import cosine_schedule, sgd
 
-
-@dataclass(frozen=True)
-class FLConfig:
-    n_vehicles: int = 95          # fleet size (Table 1)
-    vehicles_per_round: int = 5   # N_r (Fig. 5: 5 or 10)
-    local_iters: int = 1          # local SGD iterations per round
-    batch_size: int = 512         # Table 1 / Sec. 5.2
-    rounds: int = 150             # R^max
-    lr: float = 0.9               # Table 1 (cosine annealed)
-    momentum: float = 0.9
-    weight_decay: float = 5e-4
-    tau_alpha: float = 0.1
-    tau_beta: float = 1.0
-    aggregator: str = "flsimco"   # any AGGREGATORS name (core/aggregation.py)
-                                  # or "fedco" (trainer-handled baseline)
-    blur_threshold: float = KMH_100
-    moco_momentum: float = 0.99   # FedCo key-encoder EMA (Table 1)
-    queue_len: int = 4096         # FedCo global queue (Sec. 5.2)
-    feature_dim: int = 128
-    normalize_weights: bool = True
-    seed: int = 0
-
-
-# --------------------------------------------------------------------------
-# per-client local training (ResNet / images)
-# --------------------------------------------------------------------------
-
-def _client_loss(tree, cfg: FLConfig, images, key):
-    """pi1/pi2 views -> encoder -> DT loss. Returns (loss, new_tree)."""
-    k1, k2 = jax.random.split(key)
-    v1 = ssl.pi1(k1, images)
-    v2 = ssl.pi2(k2, images)
-    q, _, tree1 = resnet_apply(tree, v1, train=True)
-    k, _, tree2 = resnet_apply(tree1, v2, train=True)
-    loss = dt_loss_matrix(q, k, cfg.tau_alpha, cfg.tau_beta)
-    return loss, tree2
-
-
-def make_local_train_step(cfg: FLConfig):
-    opt_init, opt_update = sgd(cfg.momentum, cfg.weight_decay)
-
-    def local_train(tree, images, key, lr):
-        """cfg.local_iters SGD steps on one client. Returns (tree, loss).
-
-        The iteration loop is a *python* unroll, not lax.scan: XLA-CPU
-        pessimizes convolutions inside while-loops (~25x slower measured),
-        and local_iters is 1-2 in the paper.
-        """
-        opt_state = opt_init(tree["params"])
-        losses = []
-        for k in jax.random.split(key, cfg.local_iters):
-            tree_c = tree
-
-            def loss_fn(params):
-                t = {"params": params, "state": tree_c["state"]}
-                loss, t2 = _client_loss(t, cfg, images, k)
-                return loss, t2["state"]
-
-            (loss, new_state), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(tree_c["params"])
-            new_params, opt_state = opt_update(tree_c["params"], grads,
-                                               opt_state, lr)
-            tree = {"params": new_params, "state": new_state}
-            losses.append(loss)
-        return tree, jnp.stack(losses).mean()
-
-    return local_train
-
-
-def make_moco_local_train_step(cfg: FLConfig):
-    """FedCo client: InfoNCE against the (global) queue, EMA key encoder."""
-    opt_init, opt_update = sgd(cfg.momentum, cfg.weight_decay)
-
-    def local_train(tree, key_tree, queue, images, key, lr):
-        # python unroll (see make_local_train_step for the XLA-CPU rationale)
-        opt_state = opt_init(tree["params"])
-        losses, kvec = [], None
-        for k in jax.random.split(key, cfg.local_iters):
-            k1, k2 = jax.random.split(k)
-            v1 = ssl.pi1(k1, images)
-            v2 = ssl.pi2(k2, images)
-            tree_c, key_tree_c = tree, key_tree
-
-            def loss_fn(params):
-                t = {"params": params, "state": tree_c["state"]}
-                q, _, t2 = resnet_apply(t, v1, train=True)
-                kv, _, _ = resnet_apply(key_tree_c, v2, train=False)
-                kv = jax.lax.stop_gradient(kv)
-                return info_nce_loss(q, kv, queue), (t2["state"], kv)
-
-            (loss, (new_state, kvec)), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(tree_c["params"])
-            new_params, opt_state = opt_update(tree_c["params"], grads,
-                                               opt_state, lr)
-            tree = {"params": new_params, "state": new_state}
-            key_tree = {
-                "params": ssl.momentum_update(key_tree_c["params"], new_params,
-                                              cfg.moco_momentum),
-                "state": new_state,
-            }
-            losses.append(loss)
-        return tree, key_tree, kvec, jnp.stack(losses).mean()
-
-    return local_train
-
-
-# --------------------------------------------------------------------------
-# trainer
-# --------------------------------------------------------------------------
-
-@functools.lru_cache(maxsize=16)
-def _cached_local_steps(local_iters, momentum, weight_decay,
-                        tau_alpha, tau_beta):
-    f = make_local_train_step(FLConfig(
-        local_iters=local_iters, momentum=momentum,
-        weight_decay=weight_decay, tau_alpha=tau_alpha, tau_beta=tau_beta))
-    return jax.jit(f), jax.jit(jax.vmap(f, in_axes=(0, 0, 0, None)))
-
-
-def _jitted_local_steps(cfg: FLConfig):
-    """Share jitted client steps across trainers.
-
-    Keyed on exactly the fields the compiled step closes over — not the
-    whole FLConfig — so seed/aggregator/round-count sweeps reuse one
-    compilation. Bounded so long sweeps don't pin executables forever.
-    """
-    return _cached_local_steps(cfg.local_iters, cfg.momentum,
-                               cfg.weight_decay, cfg.tau_alpha, cfg.tau_beta)
-
-
-@functools.lru_cache(maxsize=16)
-def _cached_moco_step(local_iters, momentum, weight_decay, moco_momentum):
-    return jax.jit(make_moco_local_train_step(FLConfig(
-        local_iters=local_iters, momentum=momentum,
-        weight_decay=weight_decay, moco_momentum=moco_momentum)))
-
-
-def _jitted_moco_step(cfg: FLConfig):
-    return _cached_moco_step(cfg.local_iters, cfg.momentum,
-                             cfg.weight_decay, cfg.moco_momentum)
+__all__ = ["FLConfig", "FLState", "FederatedTrainer", "gradient_std",
+           "CLIENT_UPDATES", "make_local_train_step",
+           "make_moco_local_train_step"]
 
 
 class FederatedTrainer:
-    """Simulates the RSU(s) + vehicle fleet of FLSimCo on host.
+    """Back-compat shim: an `FLState` threaded through `run_round`.
 
-    Round structure is delegated to `topology` (default: the paper's
-    `SingleRSU`); the trainer owns sampling, batching, and local SGD.
+    Construction mirrors the old signature; every attribute the old
+    trainer exposed is a read-only view into the scenario/state pair.
     """
 
     def __init__(self, cfg: FLConfig, global_tree, client_data: list,
                  mobility: Optional[MobilityModel] = None,
                  blur_images: bool = True,
                  topology: Optional[Topology] = None):
-        if cfg.aggregator not in agg.AGGREGATORS and cfg.aggregator != "fedco":
-            raise ValueError(
-                f"unknown aggregator {cfg.aggregator!r}; valid: "
-                f"{sorted(agg.AGGREGATORS) + ['fedco']}")
-        self.cfg = cfg
-        self.global_tree = global_tree
-        self.client_data = client_data          # list of (images ndarray)
-        self.mobility = mobility or MobilityModel()
-        self.blur_images = blur_images
-        self.lr_fn = cosine_schedule(cfg.lr, cfg.rounds)
-        self.rng = np.random.RandomState(cfg.seed)
-        self.key = jax.random.PRNGKey(cfg.seed)
-        self._local, self._vlocal = _jitted_local_steps(cfg)
+        self.scenario = Scenario(
+            cfg,
+            topology=topology if topology is not None else SingleRSU(),
+            mobility=mobility, data=client_data, global_tree=global_tree,
+            blur_images=blur_images)
+        self.state: FLState = self.scenario.init_state()
         self.history: list[dict] = []
-        # FedCo state
-        if cfg.aggregator == "fedco":
-            self.key_tree = jax.tree.map(jnp.copy, global_tree)
-            self.global_queue = jax.random.normal(
-                jax.random.PRNGKey(cfg.seed + 1), (cfg.queue_len, cfg.feature_dim))
-            self.global_queue /= jnp.linalg.norm(self.global_queue, axis=-1,
-                                                 keepdims=True)
-            self._moco_local = _jitted_moco_step(cfg)
-        self.topology = topology if topology is not None else SingleRSU()
-        self.topology.bind(self)
 
-    # -- sampling ----------------------------------------------------------
+    # -- legacy attribute surface -------------------------------------------
 
-    def _sample_round(self):
-        n = self.cfg.vehicles_per_round
-        ids = self.rng.choice(self.cfg.n_vehicles, size=n, replace=False)
-        self.key, k = jax.random.split(self.key)
-        velocities = self.mobility.sample(k, n)
-        return ids, velocities
+    @property
+    def cfg(self) -> FLConfig:
+        return self.scenario.cfg
 
-    def _client_batch(self, cid: int, velocity):
-        data = self.client_data[cid]
-        # fixed batch size across clients (vmapped cohorts need equal
-        # shapes); small clients sample with replacement
-        idx = self.rng.choice(len(data), size=self.cfg.batch_size,
-                              replace=len(data) < self.cfg.batch_size)
-        images = jnp.asarray(data[idx])
-        if self.blur_images:
-            images = apply_motion_blur(images, velocity,
-                                       self.mobility.camera_const)
-        return images
+    @property
+    def topology(self) -> Topology:
+        return self.scenario.topology
 
-    # -- cohort execution + host aggregation (used by every topology) -------
+    @property
+    def mobility(self) -> MobilityModel:
+        return self.scenario.mobility
 
-    def _run_cohort(self, tree, ids, velocities, keys, lr,
-                    parallel: bool = True, batches=None):
-        """Run one cohort of clients from init model `tree`.
+    @property
+    def global_tree(self):
+        return self.state.global_tree
 
-        Returns (client_trees, losses). `parallel=True` vmaps the cohort
-        over a stacked tree; the sequential path is tested equivalent.
-        `batches` lets a topology pre-draw batches in round order (the
-        host RNG is a sequential stream, so draw order matters for
-        cross-topology equivalence).
-        """
-        if batches is None:
-            batches = jnp.stack([self._client_batch(c, v)
-                                 for c, v in zip(ids, velocities)])
-        if parallel:
-            stacked = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), tree)
-            trees, losses = self._vlocal(stacked, batches,
-                                         jnp.stack(keys), lr)
-            client_trees = [jax.tree.map(lambda x: x[i], trees)
-                            for i in range(len(ids))]
-            losses = list(np.asarray(losses))
-        else:
-            client_trees, losses = [], []
-            for i, cid in enumerate(ids):
-                t, l = self._local(tree, batches[i], keys[i], lr)
-                client_trees.append(t)
-                losses.append(float(l))
-        return client_trees, losses
+    @property
+    def key(self):
+        return self.state.key
 
-    def _host_aggregate(self, client_trees, velocities, blur):
-        """Single-RSU Step 4: dispatch on the configured aggregator."""
-        cfg = self.cfg
-        if cfg.aggregator == "flsimco":
-            return agg.aggregate_flsimco(client_trees, blur,
-                                         cfg.normalize_weights)
-        if cfg.aggregator == "discard":
-            return agg.aggregate_discard(client_trees, velocities,
-                                         cfg.blur_threshold)
-        if cfg.aggregator == "softmax":            # beyond-paper variant
-            return agg.aggregate_softmax(client_trees, blur)
-        if cfg.aggregator == "inverse":            # beyond-paper variant
-            return agg.aggregate_inverse(client_trees, blur)
-        assert cfg.aggregator == "fedavg", cfg.aggregator  # ctor validates
-        return agg.aggregate_fedavg(client_trees)
+    @property
+    def key_tree(self):
+        return self.state.client_state["key_tree"]
 
-    # -- one round (Steps 2-4, structured by the topology) -------------------
+    @property
+    def global_queue(self):
+        return self.state.client_state["queue"]
 
-    def round(self, r: int, parallel: bool = True) -> dict:
-        rec = self.topology.run_round(self, r, parallel=parallel)
+    @property
+    def lr_fn(self):
+        return self.scenario.lr_fn
+
+    # -- rounds --------------------------------------------------------------
+
+    def round(self, r: Optional[int] = None, parallel: bool = True) -> dict:
+        """Advance one round. `r` is accepted for signature compatibility
+        but the round counter lives in the state (it must survive
+        checkpoint/resume); a mismatching `r` is rejected."""
+        if r is not None and r != self.state.round:
+            raise ValueError(f"round index {r} does not match state round "
+                             f"{self.state.round}; the counter lives in "
+                             f"FLState now — call round() without it")
+        self.state, rec = run_round(self.state, self.scenario,
+                                    parallel=parallel)
         self.history.append(rec)
         return rec
-
-    def _round_fedco(self, r, ids, velocities, cks, lr) -> dict:
-        trees, losses, kvec_list = [], [], []
-        for i, cid in enumerate(ids):
-            images = self._client_batch(cid, velocities[i])
-            t, kt, kvecs, loss = self._moco_local(
-                self.global_tree, self.key_tree, self.global_queue,
-                images, cks[i], lr)
-            trees.append(t)
-            losses.append(float(loss))
-            kvec_list.append(kvecs)
-        # vehicles upload k-values; RSU merges them into the global queue
-        self.global_queue = ssl.fedco_merge_queues(self.global_queue, kvec_list)
-        self.global_tree = agg.aggregate_fedavg(trees)
-        self.key_tree = jax.tree.map(jnp.copy, self.global_tree)
-        # history is appended by round(), which every topology routes through
-        return {"round": r, "loss": float(np.mean(losses)),
-                "velocities": np.asarray(velocities).tolist(), "lr": float(lr)}
 
     def run(self, rounds: Optional[int] = None, log_every: int = 10,
             parallel: bool = True):
         for r in range(rounds if rounds is not None else self.cfg.rounds):
-            rec = self.round(r, parallel=parallel)
+            rec = self.round(parallel=parallel)
             if log_every and r % log_every == 0:
-                print(f"[round {r:4d}] loss={rec['loss']:.4f} lr={rec['lr']:.4f}")
+                print(f"[round {rec['round']:4d}] loss={rec['loss']:.4f} "
+                      f"lr={rec['lr']:.4f}")
         return self.history
 
 

@@ -1,0 +1,215 @@
+"""Declarative experiment builder + the pure round API.
+
+A `Scenario` names every static choice of an FLSimCo experiment — client
+algorithm, aggregation scheme, topology, mobility model, data partition,
+backbone — and the pure functions thread an explicit `FLState` through
+it:
+
+    sc = Scenario(topology="handover", aggregator="flsimco",
+                  partitioner="dirichlet", alpha=0.1,
+                  n_vehicles=8, vehicles_per_round=4, batch_size=32,
+                  rounds=6, topology_kwargs={"n_rsus": 3})
+    state = sc.init_state()
+    state, rec = run_round(state, sc)            # one pure round
+    state, history = run(sc, state, rounds=5)    # or many
+
+`run_round` never mutates its inputs: checkpoint `state.to_tree()` at any
+round, restore later (`FLState.from_tree`), and the continuation is
+bit-identical to a run that never paused (tests/test_state.py). The
+legacy `FederatedTrainer` (core/federation.py) is a thin shim over
+exactly this API.
+
+Scenario construction is declarative and lazy: dataset/partition and the
+backbone init are built on first use, so a grid of Scenarios is cheap to
+enumerate (benchmarks/) and a Scenario with explicit `data=`/
+`global_tree=` skips the builders entirely (the trainer shim path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core.clients import CLIENT_UPDATES
+from repro.core.mobility import MobilityModel
+from repro.core.state import FLConfig, FLState, pack_host_rng
+from repro.core.topology import TOPOLOGIES, Topology
+from repro.optim.optimizers import cosine_schedule
+
+PARTITIONERS = ("iid", "dirichlet")
+
+
+class Scenario:
+    """Static description of one federated experiment.
+
+    Everything that does NOT change round to round lives here; everything
+    that does lives in `FLState`. Accepts either a ready `FLConfig` (plus
+    optional field overrides) or bare FLConfig kwargs:
+
+        Scenario(cfg, topology="multi", aggregator="softmax")
+        Scenario(topology="single", client="fedco", n_vehicles=8, rounds=4)
+
+    topology         name in ``TOPOLOGIES`` (+ `topology_kwargs`) or an
+                     instance
+    aggregator       name in ``AGGREGATORS`` (overrides cfg.aggregator)
+    client           name in ``CLIENT_UPDATES`` (overrides cfg.client)
+    mobility         `MobilityModel` (velocity distribution + camera)
+    partitioner      "iid" | "dirichlet" — how the synthetic dataset is
+                     split across vehicles (alpha/min_per_client/
+                     n_per_class/data_seed tune it); ignored when `data=`
+                     is passed explicitly
+    data             per-vehicle image arrays (skips the dataset builder)
+    global_tree      round-0 model (default: init `arch` from cfg.seed)
+    """
+
+    def __init__(self, cfg: Optional[FLConfig] = None, *,
+                 topology: Union[str, Topology] = "single",
+                 aggregator: Optional[str] = None,
+                 client: Optional[str] = None,
+                 mobility: Optional[MobilityModel] = None,
+                 partitioner: str = "iid",
+                 alpha: float = 0.1,
+                 n_per_class: int = 100,
+                 min_per_client: int = 0,
+                 data_seed: int = 0,
+                 arch: str = "resnet18-cifar",
+                 data: Optional[Sequence] = None,
+                 global_tree: Any = None,
+                 blur_images: bool = True,
+                 topology_kwargs: Optional[dict] = None,
+                 **cfg_kwargs):
+        if cfg is None:
+            cfg = FLConfig(**cfg_kwargs)
+        elif cfg_kwargs:
+            cfg = dataclasses.replace(cfg, **cfg_kwargs)
+        if aggregator == "fedco":
+            # resolve the legacy alias BEFORE dataclasses.replace: the base
+            # cfg's client field is already normalized to a concrete name,
+            # which FLConfig could not tell apart from an explicit request
+            if client not in (None, "fedco"):
+                raise ValueError(
+                    "aggregator='fedco' is a legacy alias for "
+                    "client='fedco', aggregator='fedavg' and conflicts "
+                    f"with explicit client={client!r}; pick one spelling")
+            aggregator, client = "fedavg", "fedco"
+        overrides = {}
+        if aggregator is not None:
+            overrides["aggregator"] = aggregator
+        if client is not None:
+            overrides["client"] = client
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.cfg = cfg
+        if isinstance(topology, str):
+            if topology not in TOPOLOGIES:
+                raise ValueError(f"unknown topology {topology!r}; valid: "
+                                 f"{sorted(TOPOLOGIES)}")
+            topology = TOPOLOGIES[topology](**(topology_kwargs or {}))
+        elif topology_kwargs:
+            raise ValueError("topology_kwargs only applies when `topology` "
+                             "is a registry name")
+        self.topology = topology
+        self.mobility = mobility if mobility is not None else MobilityModel()
+        self.blur_images = blur_images
+        if partitioner not in PARTITIONERS:
+            raise ValueError(f"unknown partitioner {partitioner!r}; valid: "
+                             f"{sorted(PARTITIONERS)}")
+        self.partitioner = partitioner
+        self.alpha = alpha
+        self.n_per_class = n_per_class
+        self.min_per_client = min_per_client
+        self.data_seed = data_seed
+        self.arch = arch
+        self._data = list(data) if data is not None else None
+        self._dataset = None
+        self._global_tree = global_tree
+        self._lr_fn = None
+        self.topology.validate(self.cfg)
+
+    # -- lazy builders -------------------------------------------------------
+
+    @property
+    def data(self) -> list:
+        """Per-vehicle image arrays (built on first access)."""
+        if self._data is None:
+            x, y = self.dataset
+            from repro.data.synthetic import (partition_dirichlet,
+                                              partition_iid)
+            if self.partitioner == "iid":
+                parts = partition_iid(y, self.cfg.n_vehicles,
+                                      seed=self.data_seed)
+            else:
+                parts = partition_dirichlet(
+                    y, self.cfg.n_vehicles, alpha=self.alpha,
+                    min_per_client=self.min_per_client, seed=self.data_seed)
+            self._data = [x[p] for p in parts]
+        return self._data
+
+    @property
+    def dataset(self):
+        """The full (images, labels) pool — probes evaluate against this."""
+        if self._dataset is None:
+            from repro.data.synthetic import make_dataset
+            self._dataset = make_dataset(n_per_class=self.n_per_class,
+                                         seed=self.data_seed)
+        return self._dataset
+
+    def init_tree(self):
+        """Round-0 model (built from `arch` + cfg.seed unless provided)."""
+        if self._global_tree is None:
+            from repro.configs.base import get_config
+            from repro.models.resnet import init_resnet
+            self._global_tree = init_resnet(
+                get_config(self.arch), jax.random.PRNGKey(self.cfg.seed))
+        return self._global_tree
+
+    @property
+    def lr_fn(self):
+        if self._lr_fn is None:
+            self._lr_fn = cosine_schedule(self.cfg.lr, self.cfg.rounds)
+        return self._lr_fn
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self) -> FLState:
+        """The round-0 `FLState`: model, both RNG streams, per-client and
+        per-topology state. Deterministic in cfg.seed."""
+        cfg = self.cfg
+        tree = self.init_tree()
+        key = jax.random.PRNGKey(cfg.seed)
+        rng = np.random.RandomState(cfg.seed)
+        client_state = CLIENT_UPDATES[cfg.client].init_state(cfg, tree)
+        topo, key = self.topology.init_state(cfg, self.mobility, tree, key)
+        return FLState(global_tree=tree, key=key,
+                       host_rng=pack_host_rng(rng), round=0,
+                       topo=topo, client_state=client_state)
+
+
+# --------------------------------------------------------------------------
+# pure entry points
+# --------------------------------------------------------------------------
+
+def run_round(state: FLState, scenario: Scenario, parallel: bool = True):
+    """One federated round: (state, scenario) -> (state, record). Pure —
+    the input state is never mutated, and the same state yields the same
+    output bit for bit."""
+    return scenario.topology.run_round(state, scenario, parallel=parallel)
+
+
+def run(scenario: Scenario, state: Optional[FLState] = None,
+        rounds: Optional[int] = None, parallel: bool = True,
+        log_every: int = 0):
+    """Run `rounds` rounds (default cfg.rounds) from `state` (default the
+    scenario's round-0 state). Returns (final state, list of records)."""
+    if state is None:
+        state = scenario.init_state()
+    history = []
+    for _ in range(rounds if rounds is not None else scenario.cfg.rounds):
+        state, rec = run_round(state, scenario, parallel=parallel)
+        history.append(rec)
+        if log_every and rec["round"] % log_every == 0:
+            print(f"[round {rec['round']:4d}] loss={rec['loss']:.4f} "
+                  f"lr={rec['lr']:.4f}")
+    return state, history

@@ -1,0 +1,167 @@
+"""Explicit federated-learning state — the `FLState` the pure round API
+threads (DESIGN.md §3).
+
+The FLSimCo loop is a state machine: RSU model, PRNG streams (one jax
+key for velocities/augmentations, one host `numpy.random.RandomState`
+for cohort sampling and batch indices), the round counter, per-topology
+vehicle state (ring-road positions, per-RSU models, sync statistics) and
+per-client-algorithm state (FedCo's key-encoder tree + global negative
+queue). `FLState` captures ALL of it as one immutable value, so
+
+    state, rec = run_round(state, scenario)      # core/scenario.py
+
+is pure: same state in -> same state out, nothing hidden in a trainer
+object. That is what makes pause-at-round-k + `checkpoint/store.py`
+save/restore bit-identical to an uninterrupted run (tests/test_state.py).
+
+`FLState.to_tree()` / `FLState.from_tree()` convert to/from a plain
+dict/list pytree of arrays — the payload `checkpoint.store.save` writes
+and `restore(path)` reconstructs structurally (no example tree needed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.mobility import KMH_100
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    n_vehicles: int = 95          # fleet size (Table 1)
+    vehicles_per_round: int = 5   # N_r (Fig. 5: 5 or 10)
+    local_iters: int = 1          # local SGD iterations per round
+    batch_size: int = 512         # Table 1 / Sec. 5.2
+    rounds: int = 150             # R^max
+    lr: float = 0.9               # Table 1 (cosine annealed)
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    tau_alpha: float = 0.1
+    tau_beta: float = 1.0
+    aggregator: str = "flsimco"   # any AGGREGATORS name (core/aggregation.py)
+    client: Optional[str] = None  # any CLIENT_UPDATES name (core/clients.py);
+                                  # None selects the default, "dtssl"
+    blur_threshold: float = KMH_100
+    moco_momentum: float = 0.99   # FedCo key-encoder EMA (Table 1)
+    queue_len: int = 4096         # FedCo global queue (Sec. 5.2)
+    feature_dim: int = 128
+    normalize_weights: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        # legacy spelling: aggregator="fedco" meant "FedCo client algorithm
+        # aggregated with FedAvg" — normalize it into the two registries,
+        # but never silently override an explicitly requested client
+        if self.aggregator == "fedco":
+            if self.client not in (None, "fedco"):
+                raise ValueError(
+                    "aggregator='fedco' is a legacy alias for "
+                    "client='fedco', aggregator='fedavg' and conflicts "
+                    f"with explicit client={self.client!r}; pick one "
+                    "spelling")
+            object.__setattr__(self, "aggregator", "fedavg")
+            object.__setattr__(self, "client", "fedco")
+        elif self.client is None:
+            object.__setattr__(self, "client", "dtssl")
+        # deferred imports: the registries live in modules that import
+        # FLConfig, so resolving them here (call time) breaks the cycle
+        from repro.core.aggregation import AGGREGATORS
+        from repro.core.clients import CLIENT_UPDATES
+        if self.aggregator not in AGGREGATORS:
+            raise ValueError(
+                f"unknown aggregator {self.aggregator!r}; valid: "
+                f"{sorted(AGGREGATORS)}")
+        if self.client not in CLIENT_UPDATES:
+            raise ValueError(
+                f"unknown client update {self.client!r}; valid: "
+                f"{sorted(CLIENT_UPDATES)}")
+
+
+# --------------------------------------------------------------------------
+# host RNG <-> pytree
+# --------------------------------------------------------------------------
+
+def pack_host_rng(rng: np.random.RandomState) -> dict:
+    """Serialize a `RandomState` into a pytree of arrays (checkpointable)."""
+    name, keys, pos, has_gauss, cached = rng.get_state(legacy=True)
+    assert name == "MT19937", name
+    return {"mt_keys": np.asarray(keys, np.uint32),
+            "mt_pos": np.int64(pos),
+            "has_gauss": np.int64(has_gauss),
+            "cached_gaussian": np.float64(cached)}
+
+
+def unpack_host_rng(packed: dict) -> np.random.RandomState:
+    """Rebuild the `RandomState` a `pack_host_rng` snapshot described."""
+    rng = np.random.RandomState()
+    rng.set_state(("MT19937",
+                   np.asarray(packed["mt_keys"], np.uint32),
+                   int(packed["mt_pos"]),
+                   int(packed["has_gauss"]),
+                   float(packed["cached_gaussian"])))
+    return rng
+
+
+# --------------------------------------------------------------------------
+# FLState
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FLState:
+    """One immutable snapshot of the federated state machine.
+
+    global_tree   RSU/regional model pytree ({"params", "state"})
+    key           jax PRNG key (velocities, augmentations, client keys)
+    host_rng      packed numpy RandomState (cohort + batch-index draws);
+                  see pack_host_rng — NOT shared with the jax stream, so
+                  two runs built from the same FLState draw the same
+                  cohorts (the old trainer hid this in `self.rng`)
+    round         next round index (drives the cosine LR schedule)
+    topo          per-topology state dict ({} for SingleRSU/MultiRSU;
+                  positions/rsu_models/sync stats for HandoverMultiRSU)
+    client_state  per-client-algorithm state (None for DT-SSL; key_tree +
+                  queue for FedCo)
+    """
+
+    global_tree: Any
+    key: Any
+    host_rng: dict
+    round: int = 0
+    topo: dict = field(default_factory=dict)
+    client_state: Optional[dict] = None
+
+    def replace(self, **kw) -> "FLState":
+        return dataclasses.replace(self, **kw)
+
+    # -- checkpoint payload -------------------------------------------------
+
+    def to_tree(self) -> dict:
+        """Plain dict/list pytree of arrays — what checkpoint.store writes."""
+        return {"global_tree": self.global_tree,
+                "key": self.key,
+                "host_rng": dict(self.host_rng),
+                "round": np.int64(self.round),
+                "topo": self.topo,
+                "client_state": self.client_state}
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "FLState":
+        topo = dict(tree.get("topo") or {})
+        if "positions" in topo:
+            topo["positions"] = np.asarray(topo["positions"])
+        for k in ("blur_sum", "upload_count"):
+            if k in topo:
+                topo[k] = np.asarray(topo[k])
+        if "rsu_models" in topo:
+            topo["rsu_models"] = tuple(topo["rsu_models"])
+        cs = tree.get("client_state")
+        return cls(global_tree=tree["global_tree"],
+                   key=tree["key"],
+                   host_rng={k: np.asarray(v)
+                             for k, v in tree["host_rng"].items()},
+                   round=int(tree["round"]),
+                   topo=topo,
+                   client_state=dict(cs) if cs else None)

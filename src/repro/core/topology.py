@@ -1,12 +1,19 @@
-"""RSU topologies — pluggable round orchestration for `FederatedTrainer`.
+"""RSU topologies — pure round orchestration over an explicit `FLState`.
 
 The paper's FLSimCo loop (Sec. 4) assumes a single RSU, yet its own
 motivation — vehicles at high velocity — means clients cross RSU coverage
-boundaries mid-training. This module factors the *shape of a round* out of
-the trainer into a `Topology` strategy (DESIGN.md §3):
+boundaries mid-training. This module factors the *shape of a round* into
+a `Topology` strategy (DESIGN.md §3). A topology is a *stateless* config
+object: everything that changes round to round (positions, per-RSU
+models, sync statistics) lives in `FLState.topo`, so
+
+    state, rec = topology.run_round(state, scenario)
+
+is pure — same state in, same state out, nothing mutated.
 
   SingleRSU         paper-exact Steps 2-4: one RSU, one cohort, one
-                    host-side aggregation (any scheme in the registry).
+                    host-side aggregation (any ``AGGREGATORS`` scheme,
+                    any ``CLIENT_UPDATES`` algorithm).
   MultiRSU          N RSUs under one regional server. Each RSU trains its
                     cohort as a vmapped batch and aggregates locally
                     (Eq. 11), then the region merges the RSU models —
@@ -15,16 +22,14 @@ the trainer into a `Topology` strategy (DESIGN.md §3):
                     (pod, data) mesh is available. With n_rsus=1 this
                     reduces exactly to SingleRSU (tests/test_topology.py).
   HandoverMultiRSU  MultiRSU plus vehicle motion: per-RSU models persist
-                    across rounds, vehicles hold positions on a circular
-                    road (`MobilityModel.init_positions` /
-                    `advance_positions`) and download from the RSU covering
-                    their position at round start. Positions advance during
-                    local training; a vehicle that ends the round under a
-                    different RSU uploads *there* (a handover), and the
-                    receiving RSU discounts that stale upload's Eq.-11
-                    weight by `stale_discount` because it was trained from
-                    another RSU's model. Every `sync_every` rounds the
-                    region hierarchically merges the RSU models.
+                    across rounds in `FLState.topo`, vehicles hold
+                    positions on a circular road and download from the
+                    RSU covering their position at round start. Positions
+                    advance during local training; a vehicle that ends
+                    the round under a different RSU uploads *there* (a
+                    handover), and the receiving RSU discounts that stale
+                    upload's Eq.-11 weight by `stale_discount`. Every
+                    `sync_every` rounds the region merges the RSU models.
 
 All three funnel their weighted sums through
 `core.aggregation._weighted_tree_sum`, i.e. the fused Pallas `wagg` kernel
@@ -33,7 +38,7 @@ kernel anywhere).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,25 +46,84 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
+from repro.core.clients import CLIENT_UPDATES
 from repro.core.hierarchical import (aggregate_hierarchical,
                                      two_stage_weighted_psum)
+from repro.core.mobility import apply_motion_blur
+from repro.core.state import FLConfig, FLState, pack_host_rng, unpack_host_rng
+
+
+# --------------------------------------------------------------------------
+# shared round machinery (host RNG draws in a fixed, documented order)
+# --------------------------------------------------------------------------
+
+def _client_batch(rng, scenario, cid: int, velocity):
+    """One client's training batch, drawn from the *host* RNG stream.
+
+    Fixed batch size across clients (vmapped cohorts need equal shapes);
+    small clients sample with replacement.
+    """
+    data = scenario.data[cid]
+    cfg = scenario.cfg
+    idx = rng.choice(len(data), size=cfg.batch_size,
+                     replace=len(data) < cfg.batch_size)
+    images = jnp.asarray(data[idx])
+    if scenario.blur_images:
+        images = apply_motion_blur(images, velocity,
+                                   scenario.mobility.camera_const)
+    return images
+
+
+def _draw_batches(rng, scenario, ids, velocities):
+    """Batches for a cohort, drawn in `ids` order (the host RNG is a
+    sequential stream, so draw order matters for cross-topology
+    equivalence — see MultiRSU.run_round)."""
+    return jnp.stack([_client_batch(rng, scenario, c, v)
+                      for c, v in zip(ids, velocities)])
+
+
+def _sample_cohort(state, scenario):
+    """Round preamble shared by SingleRSU and MultiRSU.
+
+    The draw ORDER (host-RNG cohort ids -> jax velocity key -> per-client
+    keys) is load-bearing: the MultiRSU(1) == SingleRSU bit-exactness
+    guarantee requires both topologies to consume both RNG streams
+    identically, so the sequence lives in exactly one place.
+    Returns (rng, ids, velocities, lr, key, client_keys).
+    """
+    cfg, mob = scenario.cfg, scenario.mobility
+    rng = unpack_host_rng(state.host_rng)
+    ids = rng.choice(cfg.n_vehicles, size=cfg.vehicles_per_round,
+                     replace=False)
+    key, kv = jax.random.split(state.key)
+    velocities = mob.sample(kv, len(ids))
+    lr = scenario.lr_fn(state.round)
+    key, *cks = jax.random.split(key, len(ids) + 1)
+    return rng, ids, velocities, lr, key, cks
 
 
 class Topology:
     """Strategy object: owns the structure of one federated round.
 
-    `bind(trainer)` is called once from the trainer constructor (validate
-    the config, initialize topology state); `run_round(trainer, r)` runs
-    Steps 2-4 for round `r`, updates `trainer.global_tree`, and returns the
-    round record (the trainer appends it to `history`).
+    Topologies hold only static configuration (n_rsus, ranges, ...);
+    round-to-round state lives in `FLState.topo`, produced by
+    `init_state` and threaded through `run_round`.
+
+    validate(cfg)                      fail fast on unsupported configs
+    init_state(cfg, mobility,
+               global_tree, key)       -> (topo_state dict, new key)
+    run_round(state, scenario)         -> (new FLState, round record)
     """
 
     name = "base"
 
-    def bind(self, trainer) -> None:
+    def validate(self, cfg: FLConfig) -> None:
         pass
 
-    def run_round(self, trainer, r: int, parallel: bool = True) -> dict:
+    def init_state(self, cfg: FLConfig, mobility, global_tree, key):
+        return {}, key
+
+    def run_round(self, state: FLState, scenario, parallel: bool = True):
         raise NotImplementedError
 
 
@@ -68,32 +132,34 @@ class SingleRSU(Topology):
 
     name = "single"
 
-    def run_round(self, trainer, r: int, parallel: bool = True) -> dict:
-        cfg = trainer.cfg
-        ids, velocities = trainer._sample_round()
-        lr = trainer.lr_fn(r)
-        trainer.key, *cks = jax.random.split(trainer.key, len(ids) + 1)
-        if cfg.aggregator == "fedco":
-            rec = trainer._round_fedco(r, ids, velocities, cks, lr)
-            rec["topology"] = self.name
-            return rec
-        client_trees, losses = trainer._run_cohort(
-            trainer.global_tree, ids, velocities, cks, lr, parallel)
-        blur = trainer.mobility.blur_level(velocities)
-        trainer.global_tree = trainer._host_aggregate(
-            client_trees, velocities, blur)
-        return {"round": r, "loss": float(np.mean(losses)),
-                "velocities": np.asarray(velocities).tolist(),
-                "lr": float(lr), "topology": self.name}
+    def run_round(self, state: FLState, scenario, parallel: bool = True):
+        cfg, mob = scenario.cfg, scenario.mobility
+        rng, ids, velocities, lr, key, cks = _sample_cohort(state, scenario)
+        client = CLIENT_UPDATES[cfg.client]
+        batches = _draw_batches(rng, scenario, ids, velocities)
+        client_trees, losses, uploads = client.run_cohort(
+            cfg, state.global_tree, state.client_state, batches, cks, lr,
+            parallel)
+        blur = mob.blur_level(velocities)
+        new_tree = agg.AGGREGATORS[cfg.aggregator](
+            client_trees, velocities, blur, cfg)
+        new_cs = client.finalize(cfg, state.client_state, new_tree, uploads)
+        rec = {"round": state.round, "loss": float(np.mean(losses)),
+               "velocities": np.asarray(velocities).tolist(),
+               "lr": float(lr), "topology": self.name}
+        return state.replace(global_tree=new_tree, key=key,
+                             host_rng=pack_host_rng(rng),
+                             round=state.round + 1,
+                             client_state=new_cs), rec
 
 
-def _require_flsimco(trainer, name: str) -> None:
-    if trainer.cfg.aggregator != "flsimco":
+def _require_flsimco(cfg: FLConfig, name: str) -> None:
+    if cfg.aggregator != "flsimco":
         raise ValueError(
             f"{name} implements the hierarchical Eq.-11 (blur-weighted) "
             f"extension and requires aggregator='flsimco'; got "
-            f"{trainer.cfg.aggregator!r}. Run other schemes under SingleRSU.")
-    if not trainer.cfg.normalize_weights:
+            f"{cfg.aggregator!r}. Run other schemes under SingleRSU.")
+    if not cfg.normalize_weights:
         raise ValueError(
             f"{name} always normalizes Eq.-11 weights (DESIGN.md deviation "
             f"#2); normalize_weights=False would break the "
@@ -122,11 +188,11 @@ class MultiRSU(Topology):
         self.count_scaled = count_scaled
         self.mesh_aggregate = mesh_aggregate
 
-    def bind(self, trainer) -> None:
-        _require_flsimco(trainer, "MultiRSU")
+    def validate(self, cfg: FLConfig) -> None:
+        _require_flsimco(cfg, "MultiRSU")
         if self.mesh_aggregate:
             # fail before any training work, not after the cohort has run
-            n = trainer.cfg.vehicles_per_round
+            n = cfg.vehicles_per_round
             if n % self.n_rsus:
                 raise ValueError(
                     f"mesh_aggregate needs equal per-RSU cohorts: "
@@ -138,36 +204,43 @@ class MultiRSU(Topology):
                     f"({self.n_rsus} RSUs x {n // self.n_rsus} vehicles); "
                     f"have {jax.device_count()}")
 
-    def run_round(self, trainer, r: int, parallel: bool = True) -> dict:
-        ids, velocities = trainer._sample_round()
-        lr = trainer.lr_fn(r)
-        trainer.key, *cks = jax.random.split(trainer.key, len(ids) + 1)
-        blur = trainer.mobility.blur_level(velocities)
+    def run_round(self, state: FLState, scenario, parallel: bool = True):
+        cfg, mob = scenario.cfg, scenario.mobility
+        rng, ids, velocities, lr, key, cks = _sample_cohort(state, scenario)
+        blur = mob.blur_level(velocities)
+        client = CLIENT_UPDATES[cfg.client]
         # draw every batch in round order BEFORE partitioning: the host RNG
         # is sequential, so this keeps MultiRSU(1) bit-identical to SingleRSU
-        batches = jnp.stack([trainer._client_batch(c, v)
-                             for c, v in zip(ids, velocities)])
+        batches = _draw_batches(rng, scenario, ids, velocities)
         assign = np.arange(len(ids)) % self.n_rsus
-        groups, blur_groups, losses, sizes = [], [], [], []
+        groups, blur_groups, losses, sizes, uploads = [], [], [], [], []
         for rsu in range(self.n_rsus):
             sel = np.where(assign == rsu)[0]
             if sel.size == 0:
                 continue
-            trees, ls = trainer._run_cohort(
-                trainer.global_tree, ids[sel], velocities[sel],
-                [cks[i] for i in sel], lr, parallel, batches=batches[sel])
+            trees, ls, ups = client.run_cohort(
+                cfg, state.global_tree, state.client_state, batches[sel],
+                [cks[i] for i in sel], lr, parallel)
             groups.append(trees)
             blur_groups.append(blur[sel])
             losses.extend(ls)
             sizes.append(int(sel.size))
+            if ups:
+                uploads.extend(ups)
         if self.mesh_aggregate:
-            trainer.global_tree = self._mesh_aggregate(groups, blur_groups)
+            new_tree = self._mesh_aggregate(groups, blur_groups)
         else:
-            trainer.global_tree = aggregate_hierarchical(
-                groups, blur_groups, self.count_scaled)
-        return {"round": r, "loss": float(np.mean(losses)),
-                "velocities": np.asarray(velocities).tolist(),
-                "lr": float(lr), "topology": self.name, "rsu_sizes": sizes}
+            new_tree = aggregate_hierarchical(groups, blur_groups,
+                                              self.count_scaled)
+        new_cs = client.finalize(cfg, state.client_state, new_tree,
+                                 uploads or None)
+        rec = {"round": state.round, "loss": float(np.mean(losses)),
+               "velocities": np.asarray(velocities).tolist(),
+               "lr": float(lr), "topology": self.name, "rsu_sizes": sizes}
+        return state.replace(global_tree=new_tree, key=key,
+                             host_rng=pack_host_rng(rng),
+                             round=state.round + 1,
+                             client_state=new_cs), rec
 
     def _mesh_aggregate(self, groups: Sequence, blur_groups: Sequence):
         """Region merge as the two-stage collective over a (pod, data) mesh.
@@ -216,6 +289,19 @@ class HandoverMultiRSU(Topology):
     Every `sync_every` rounds the regional server merges the RSU models
     with blur-weighted, upload-count-scaled level-2 weights (accumulated
     since the last sync) and redistributes the merged model.
+
+    Clients always run on the sequential (non-vmapped) path here — per-RSU
+    cohort sizes change with vehicle positions every round, and the vmapped
+    step would recompile per distinct size; `run_round`'s `parallel` flag
+    is accepted but ignored.
+
+    Per-round vehicle state (positions, per-RSU models, sync statistics)
+    lives in `FLState.topo`:
+
+      positions      (n_vehicles,) ring-road positions
+      rsu_models     tuple of n_rsus model pytrees
+      blur_sum       (n_rsus,) blur accumulated since last sync
+      upload_count   (n_rsus,) uploads accumulated since last sync
     """
 
     name = "handover"
@@ -236,58 +322,74 @@ class HandoverMultiRSU(Topology):
         self.stale_discount = stale_discount
         self.sync_every = sync_every
         self.count_scaled = count_scaled
-        self.positions: Optional[np.ndarray] = None
-        self.rsu_models: list = []
-        self._blur_sum = np.zeros(n_rsus)
-        self._upload_count = np.zeros(n_rsus)
 
-    def bind(self, trainer) -> None:
-        _require_flsimco(trainer, "HandoverMultiRSU")
-        trainer.key, kp = jax.random.split(trainer.key)
-        self.positions = np.asarray(trainer.mobility.init_positions(
-            kp, trainer.cfg.n_vehicles, self.road_length))
-        self.rsu_models = [trainer.global_tree] * self.n_rsus
-        # rebinding to a fresh trainer must not carry sync statistics over
-        self._blur_sum[:] = 0.0
-        self._upload_count[:] = 0.0
+    def validate(self, cfg: FLConfig) -> None:
+        _require_flsimco(cfg, "HandoverMultiRSU")
+        if cfg.client != "dtssl":
+            raise ValueError(
+                "HandoverMultiRSU keeps divergent per-RSU models between "
+                "syncs, so client algorithms with global server state "
+                f"(client={cfg.client!r}) are undefined here; use "
+                "client='dtssl' or the SingleRSU/MultiRSU topologies.")
+
+    def init_state(self, cfg: FLConfig, mobility, global_tree, key):
+        key, kp = jax.random.split(key)
+        positions = np.asarray(mobility.init_positions(
+            kp, cfg.n_vehicles, self.road_length))
+        return {"positions": positions,
+                "rsu_models": tuple([global_tree] * self.n_rsus),
+                "blur_sum": np.zeros(self.n_rsus),
+                "upload_count": np.zeros(self.n_rsus)}, key
 
     def rsu_index(self, positions) -> np.ndarray:
         return (np.floor_divide(np.asarray(positions), self.rsu_range)
                 .astype(np.int64) % self.n_rsus)
 
-    def run_round(self, trainer, r: int, parallel: bool = True) -> dict:
-        cfg, mob = trainer.cfg, trainer.mobility
+    def run_round(self, state: FLState, scenario, parallel: bool = True):
+        cfg, mob = scenario.cfg, scenario.mobility
+        rng = unpack_host_rng(state.host_rng)
+        positions = np.asarray(state.topo["positions"])
+        rsu_models = list(state.topo["rsu_models"])
+        blur_sum = np.array(state.topo["blur_sum"], np.float64)
+        upload_count = np.array(state.topo["upload_count"], np.float64)
+
         n = cfg.vehicles_per_round
-        ids = trainer.rng.choice(cfg.n_vehicles, size=n, replace=False)
+        ids = rng.choice(cfg.n_vehicles, size=n, replace=False)
         # one velocity draw per vehicle per round, used for both the blur
         # level of the participants' captures and the whole fleet's motion
-        trainer.key, kv = jax.random.split(trainer.key)
+        key, kv = jax.random.split(state.key)
         fleet_v = mob.sample(kv, cfg.n_vehicles)
         velocities = jnp.take(fleet_v, jnp.asarray(ids))
-        lr = trainer.lr_fn(r)
-        trainer.key, *cks = jax.random.split(trainer.key, n + 1)
+        lr = scenario.lr_fn(state.round)
+        key, *cks = jax.random.split(key, n + 1)
+        client = CLIENT_UPDATES[cfg.client]
 
-        # Step 2: download from the RSU covering the round-start position
-        down = self.rsu_index(self.positions[ids])
+        # Step 2: download from the RSU covering the round-start position.
+        # Always the sequential client path: per-RSU cohort sizes vary with
+        # vehicle positions round to round, and the vmapped step specializes
+        # on cohort size — one cached jit beats a fresh XLA compile per new
+        # size (benchmarks/multi_rsu.py measures the same way).
+        down = self.rsu_index(positions[ids])
         client_trees: list = [None] * n
         losses: list = [0.0] * n
         for rsu in range(self.n_rsus):
             sel = np.where(down == rsu)[0]
             if sel.size == 0:
                 continue
-            trees, ls = trainer._run_cohort(
-                self.rsu_models[rsu], ids[sel], velocities[sel],
-                [cks[i] for i in sel], lr, parallel)
+            batches = _draw_batches(rng, scenario, ids[sel], velocities[sel])
+            trees, ls, _ = client.run_cohort(
+                cfg, rsu_models[rsu], state.client_state, batches,
+                [cks[i] for i in sel], lr, parallel=False)
             for j, i in enumerate(sel):
                 client_trees[i] = trees[j]
                 losses[i] = ls[j]
 
         # motion during the round: everyone moves, positions wrap
-        self.positions = np.asarray(mob.advance_positions(
-            self.positions, fleet_v, self.round_duration, self.road_length))
+        positions = np.asarray(mob.advance_positions(
+            positions, fleet_v, self.round_duration, self.road_length))
 
         # Step 3-4: upload to the RSU now covering the vehicle
-        up = self.rsu_index(self.positions[ids])
+        up = self.rsu_index(positions[ids])
         stale = up != down
         blur = np.asarray(mob.blur_level(velocities))
         upload_sizes = []
@@ -299,37 +401,49 @@ class HandoverMultiRSU(Topology):
             w = np.asarray(agg.flsimco_weights(jnp.asarray(blur[sel])))
             w = w * np.where(stale[sel], self.stale_discount, 1.0)
             s = w.sum()
-            # all uploads stale with stale_discount=0: fall back to uniform
-            # rather than zeroing the RSU model
-            w = w / s if s > 1e-12 else np.full_like(w, 1.0 / len(w))
-            self.rsu_models[rsu] = agg._weighted_tree_sum(
-                [client_trees[i] for i in sel], w)
-            self._blur_sum[rsu] += float(blur[sel].sum())
-            self._upload_count[rsu] += sel.size
+            if s <= 1e-12:
+                # every upload stale with stale_discount=0: no usable
+                # uploads — the RSU keeps its model (same as receiving
+                # none), rather than handing the discarded uploads full
+                # uniform weight
+                continue
+            rsu_models[rsu] = agg._weighted_tree_sum(
+                [client_trees[i] for i in sel], w / s)
+            blur_sum[rsu] += float(blur[sel].sum())
+            upload_count[rsu] += sel.size
 
-        synced = (r + 1) % self.sync_every == 0
+        synced = (state.round + 1) % self.sync_every == 0
+        new_tree = state.global_tree
         if synced:
-            trainer.global_tree = self._region_sync(mob)
-        # between syncs trainer.global_tree keeps the last merged model;
-        # RSU models stay divergent until sync (region_view() merges on
-        # demand without paying an n_rsus-model sum every round)
-        return {"round": r, "loss": float(np.mean(losses)),
-                "velocities": np.asarray(velocities).tolist(),
-                "lr": float(lr), "topology": self.name,
-                "rsu_sizes": upload_sizes,
-                "n_handovers": int(stale.sum()), "synced": synced}
+            new_tree, rsu_models = self._region_sync(
+                mob, rsu_models, blur_sum, upload_count)
+            blur_sum = np.zeros(self.n_rsus)
+            upload_count = np.zeros(self.n_rsus)
+        # between syncs global_tree keeps the last merged model; RSU models
+        # stay divergent until sync (region_view() merges on demand without
+        # paying an n_rsus-model sum every round)
+        rec = {"round": state.round, "loss": float(np.mean(losses)),
+               "velocities": np.asarray(velocities).tolist(),
+               "lr": float(lr), "topology": self.name,
+               "rsu_sizes": upload_sizes,
+               "n_handovers": int(stale.sum()), "synced": synced}
+        topo = {"positions": positions, "rsu_models": tuple(rsu_models),
+                "blur_sum": blur_sum, "upload_count": upload_count}
+        return state.replace(global_tree=new_tree, key=key,
+                             host_rng=pack_host_rng(rng),
+                             round=state.round + 1, topo=topo), rec
 
-    def region_view(self):
+    def region_view(self, state: FLState):
         """Uniform merge of the current per-RSU models — an evaluation
-        snapshot between syncs; does not touch topology state."""
-        return agg.aggregate_fedavg(self.rsu_models)
+        snapshot between syncs; does not touch the state."""
+        return agg.aggregate_fedavg(list(state.topo["rsu_models"]))
 
-    def _region_sync(self, mob):
+    def _region_sync(self, mob, rsu_models, blur_sum, upload_count):
         """Level-2 merge of the per-RSU models (Eq. 11 over mean blur,
         optionally scaled by uploads since the last sync)."""
-        counts = self._upload_count
+        counts = upload_count
         mean_blur = np.where(
-            counts > 0, self._blur_sum / np.maximum(counts, 1.0),
+            counts > 0, blur_sum / np.maximum(counts, 1.0),
             float(mob.blur_level(mob.mu)))   # no uploads: prior mean blur
         W = np.asarray(agg.flsimco_weights(jnp.asarray(mean_blur,
                                                        jnp.float32)))
@@ -337,11 +451,8 @@ class HandoverMultiRSU(Topology):
             W = W * counts
         s = W.sum()
         W = W / s if s > 1e-12 else np.full_like(W, 1.0 / len(W))
-        merged = agg._weighted_tree_sum(self.rsu_models, W)
-        self.rsu_models = [merged] * self.n_rsus
-        self._blur_sum[:] = 0.0
-        self._upload_count[:] = 0.0
-        return merged
+        merged = agg._weighted_tree_sum(rsu_models, W)
+        return merged, [merged] * self.n_rsus
 
 
 TOPOLOGIES = {

@@ -1,13 +1,23 @@
 """Production training driver.
 
-On TPU: builds the production mesh, shards params per launch/sharding.py,
-and runs the federated train step (blur-weighted aggregation collective).
-On this CPU container: ``--reduced`` runs real steps of the same code on
-the 1-device host mesh; without it the driver lowers+compiles only (the
-multi-pod dry-run path lives in dryrun.py).
+Two modes, one experiment vocabulary:
+
+``--mode mesh`` (default) — the TPU path: builds the production mesh,
+shards params per launch/sharding.py, and runs the federated train step
+(blur-weighted aggregation collective). On this CPU container
+``--reduced`` runs real steps of the same code on the 1-device host
+mesh; without it the driver lowers+compiles only (the multi-pod dry-run
+path lives in dryrun.py).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --steps 3 --objective lm
+
+``--mode sim`` — the host-level FL simulation, declared as the same
+`Scenario` the examples and benchmarks use and driven through the pure
+`run_round` API, with full-`FLState` checkpoint/resume:
+
+  PYTHONPATH=src python -m repro.launch.train --mode sim --topology multi \
+      --rounds 4 --vehicles 8 --ckpt-dir /tmp/flsim --resume
 """
 from __future__ import annotations
 
@@ -26,8 +36,44 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import transformer as T
 
 
+def run_sim(a) -> None:
+    """Scenario-driven FL simulation with FLState checkpointing."""
+    import os
+
+    from repro.checkpoint.store import latest, restore_state, save_state
+    from repro.core.scenario import Scenario, run_round
+
+    sc = Scenario(topology=a.topology, aggregator=a.aggregation,
+                  client=a.client, partitioner=a.partitioner,
+                  n_per_class=a.n_per_class,
+                  n_vehicles=a.vehicles, vehicles_per_round=a.per_round,
+                  batch_size=a.batch, rounds=a.rounds, lr=a.sim_lr)
+    state = None
+    if a.resume and a.ckpt_dir:
+        found = latest(a.ckpt_dir)
+        if found:
+            state = restore_state(found[0], scenario=sc)
+            print(f"resumed FLState from {found[0]} (round {state.round})")
+    if state is None:
+        state = sc.init_state()
+    print(f"sim {sc.topology.name} agg={sc.cfg.aggregator} "
+          f"client={sc.cfg.client} vehicles={sc.cfg.n_vehicles} "
+          f"rounds={sc.cfg.rounds}")
+    while state.round < sc.cfg.rounds:
+        t0 = time.time()
+        state, rec = run_round(state, sc)
+        print(f"round {rec['round']}: loss={rec['loss']:.4f} "
+              f"({time.time()-t0:.2f}s)")
+        assert np.isfinite(rec["loss"])
+        if a.ckpt_dir:
+            save_state(os.path.join(a.ckpt_dir,
+                                    f"ckpt_{state.round}.npz"), state,
+                       scenario=sc)
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="mesh", choices=["mesh", "sim"])
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--reduced", action="store_true")
@@ -37,7 +83,25 @@ def main():
                     choices=["flsimco", "fedavg", "discard"])
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--multi-pod", action="store_true")
+    # --mode sim knobs (Scenario fields)
+    ap.add_argument("--topology", default="single",
+                    choices=["single", "multi", "handover"])
+    ap.add_argument("--client", default="dtssl", choices=["dtssl", "fedco"])
+    ap.add_argument("--partitioner", default="iid",
+                    choices=["iid", "dirichlet"])
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--vehicles", type=int, default=6)
+    ap.add_argument("--per-round", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--n-per-class", type=int, default=40)
+    ap.add_argument("--sim-lr", type=float, default=0.5)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", action="store_true")
     a = ap.parse_args()
+
+    if a.mode == "sim":
+        run_sim(a)
+        return
 
     cfg = get_config(a.arch)
     if a.reduced:

@@ -1,11 +1,14 @@
-"""Checkpoint round-trip tests."""
+"""Checkpoint round-trip tests: legacy `like`-based restore, structural
+(no-example-tree) restore, and full-FLState payloads."""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint.store import latest, restore, save
+from repro.checkpoint.store import (latest, restore, restore_state, save,
+                                    save_state)
 
 
 def test_roundtrip(tmp_path):
@@ -34,6 +37,98 @@ def test_shape_mismatch_raises(tmp_path):
     tree = {"x": jnp.zeros((3,))}
     p = os.path.join(tmp_path, "c.npz")
     save(p, 0, tree)
-    import pytest
     with pytest.raises(ValueError):
         restore(p, {"x": jnp.zeros((4,))})
+
+
+def test_structural_restore_needs_no_example_tree(tmp_path):
+    """The stored spec rebuilds dict/list/tuple/None nesting exactly —
+    including bfloat16 leaves and exact int64/float64 scalars."""
+    tree = {"params": {"w": jax.random.normal(jax.random.PRNGKey(1), (4, 5)),
+                       "b": (jnp.full((3,), 2.5, jnp.bfloat16),
+                             jnp.int32(7))},
+            "none_field": None,
+            "counters": [np.int64(2**40 + 3), np.float64(1e-300)]}
+    p = os.path.join(tmp_path, "structural.npz")
+    save(p, 4, tree)
+    step, restored = restore(p)          # <- no `like`
+    assert step == 4
+    assert isinstance(restored, dict)
+    assert isinstance(restored["params"]["b"], tuple)
+    assert restored["none_field"] is None
+    assert isinstance(restored["counters"], list)
+    assert restored["params"]["b"][0].dtype == jnp.bfloat16
+    # int64/float64 survive exactly (no x32 narrowing)
+    assert int(restored["counters"][0]) == 2**40 + 3
+    assert float(restored["counters"][1]) == 1e-300
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flstate_roundtrip_with_bf16_and_fedco_queue(tmp_path):
+    """A full FLState payload — bf16 model leaves, FedCo key-tree + queue,
+    host RNG, round counter — round-trips structurally."""
+    from repro.core.scenario import Scenario
+
+    sc = Scenario(client="fedco", aggregator="fedavg", partitioner="iid",
+                  n_per_class=10, n_vehicles=4, vehicles_per_round=2,
+                  batch_size=4, rounds=2, queue_len=32, seed=9)
+    state = sc.init_state()
+    # exercise the raw-bits path on a model leaf too
+    tree = dict(state.global_tree)
+    tree["extra_bf16"] = jnp.arange(6, dtype=jnp.bfloat16)
+    state = state.replace(global_tree=tree)
+
+    p = save_state(os.path.join(tmp_path, "flstate.npz"), state)
+    restored = restore_state(p)
+    assert restored.round == state.round == 0
+    assert restored.global_tree["extra_bf16"].dtype == jnp.bfloat16
+    assert set(restored.client_state) == {"key_tree", "queue"}
+    np.testing.assert_array_equal(np.asarray(restored.client_state["queue"]),
+                                  np.asarray(state.client_state["queue"]))
+    for a, b in zip(jax.tree.leaves(state.to_tree()),
+                    jax.tree.leaves(restored.to_tree())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_state_rejects_mismatched_scenario(tmp_path):
+    """A checkpoint stamped with one experiment's fingerprint refuses to
+    resume under a different client/aggregator/topology."""
+    import jax.random as jr
+
+    from repro.core.scenario import Scenario
+    from repro.core.state import FLState, pack_host_rng
+
+    sc_a = Scenario(partitioner="iid", n_vehicles=4, vehicles_per_round=2,
+                    batch_size=4, rounds=2, seed=0)
+    state = FLState(global_tree={"w": jnp.zeros((2,))}, key=jr.PRNGKey(0),
+                    host_rng=pack_host_rng(np.random.RandomState(0)))
+    p = save_state(os.path.join(tmp_path, "fp.npz"), state, scenario=sc_a)
+    # same scenario: fine
+    restore_state(p, scenario=sc_a)
+    # different aggregator: loud failure naming the field
+    sc_b = Scenario(aggregator="fedavg", partitioner="iid", n_vehicles=4,
+                    vehicles_per_round=2, batch_size=4, rounds=2, seed=0)
+    with pytest.raises(ValueError, match="aggregator"):
+        restore_state(p, scenario=sc_b)
+    # no scenario / no sidecar: check is skipped
+    restore_state(p)
+    p2 = save_state(os.path.join(tmp_path, "nofp.npz"), state)
+    restore_state(p2, scenario=sc_b)
+
+
+def test_restore_without_spec_requires_like(tmp_path):
+    """Checkpoints written before structural specs still restore with an
+    example tree; without one the error is actionable."""
+    tree = {"x": jnp.arange(4)}
+    p = os.path.join(tmp_path, "old.npz")
+    save(p, 1, tree)
+    # simulate a pre-spec checkpoint by stripping __spec__
+    z = dict(np.load(p))
+    z.pop("__spec__")
+    np.savez(p, **z)
+    with pytest.raises(ValueError, match="structural"):
+        restore(p)
+    step, restored = restore(p, tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(4))

@@ -1,0 +1,150 @@
+"""Pure-round API: FLState purity, host-RNG decoupling, and bit-exact
+checkpoint/resume for every topology and the FedCo client.
+
+These are the acceptance tests of the functional redesign: `run_round`
+must be a pure function of (FLState, Scenario), and saving the state at
+round k then restoring must continue bit-identically to a run that never
+paused — model tree, RNG streams, topology state, FedCo queue, and the
+round records all included.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import restore_state, save_state
+from repro.core.scenario import Scenario, run, run_round
+from repro.core.state import FLState, pack_host_rng, unpack_host_rng
+
+# tiny-world scenario kwargs shared by every case (CPU-friendly)
+TINY = dict(partitioner="iid", n_per_class=20, n_vehicles=6,
+            batch_size=8, rounds=10, local_iters=1, lr=0.4, seed=11)
+
+CASES = {
+    "single": dict(topology="single", vehicles_per_round=2),
+    "multi": dict(topology="multi", topology_kwargs={"n_rsus": 2},
+                  vehicles_per_round=4),
+    "handover": dict(topology="handover",
+                     topology_kwargs={"n_rsus": 2, "rsu_range": 200.0,
+                                      "round_duration": 50.0,
+                                      "sync_every": 2},
+                     vehicles_per_round=3),
+    "fedco": dict(topology="single", client="fedco", aggregator="fedavg",
+                  queue_len=64, vehicles_per_round=2),
+}
+
+
+def _scenario(case: str) -> Scenario:
+    return Scenario(**{**TINY, **CASES[case]})
+
+
+def _assert_states_identical(s1: FLState, s2: FLState):
+    l1, l2 = jax.tree.leaves(s1.to_tree()), jax.tree.leaves(s2.to_tree())
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert s1.round == s2.round
+
+
+def test_run_round_is_pure():
+    """Same FLState in -> same FLState out, and the input is untouched."""
+    sc = _scenario("single")
+    state = sc.init_state()
+    before = [np.asarray(l).copy() for l in jax.tree.leaves(state.to_tree())]
+    s1, r1 = run_round(state, sc)
+    s2, r2 = run_round(state, sc)
+    assert r1 == r2
+    _assert_states_identical(s1, s2)
+    # the input state was not mutated by either call
+    for a, b in zip(before, jax.tree.leaves(state.to_tree())):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    assert s1.round == state.round + 1
+
+
+def test_host_rng_is_state_not_hidden():
+    """Cohort/batch draws come from FLState.host_rng, not trainer-object
+    RNG: two runs from the same mid-training state draw the same cohorts
+    (velocities identify the cohort draw)."""
+    sc = _scenario("single")
+    state, _ = run_round(sc.init_state(), sc)
+    _, r1 = run_round(state, sc)
+    _, r2 = run_round(state, sc)
+    assert r1["velocities"] == r2["velocities"]
+    # and the host stream actually advanced across the first round
+    rng0 = unpack_host_rng(sc.init_state().host_rng)
+    rng1 = unpack_host_rng(state.host_rng)
+    assert not np.array_equal(rng0.get_state()[1], rng1.get_state()[1]) or \
+        rng0.get_state()[2] != rng1.get_state()[2]
+
+
+def test_host_rng_pack_roundtrip():
+    rng = np.random.RandomState(3)
+    rng.choice(100, size=7)                      # advance the stream
+    twin = unpack_host_rng(pack_host_rng(rng))
+    np.testing.assert_array_equal(rng.choice(1000, size=50),
+                                  twin.choice(1000, size=50))
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_resume_is_bit_exact(case, tmp_path):
+    """10 rounds straight == 5 rounds + save + restore + 5 rounds, down to
+    the last bit of every FLState leaf and every history record."""
+    sc = _scenario(case)
+    straight, hist_straight = run(sc, rounds=10)
+
+    mid, hist_a = run(sc, rounds=5)
+    path = save_state(os.path.join(tmp_path, "ckpt_5.npz"), mid)
+    restored = restore_state(path)
+    assert restored.round == 5
+    _assert_states_identical(mid, restored)
+    resumed, hist_b = run(sc, restored, rounds=5)
+
+    _assert_states_identical(straight, resumed)
+    assert hist_straight == hist_a + hist_b
+
+
+def test_fedco_state_lives_in_flstate():
+    """The FedCo key-tree + queue are FLState fields, not trainer
+    attributes; the queue round-trips through the checkpoint."""
+    sc = _scenario("fedco")
+    state = sc.init_state()
+    assert set(state.client_state) == {"key_tree", "queue"}
+    state2, _ = run_round(state, sc)
+    q0 = np.asarray(state.client_state["queue"])
+    q1 = np.asarray(state2.client_state["queue"])
+    assert q1.shape == q0.shape
+    assert not np.allclose(q0, q1)
+
+
+def test_trainer_shim_matches_pure_api():
+    """FederatedTrainer is a veneer: it must reproduce the pure API's
+    states and records exactly."""
+    from repro.core.federation import FederatedTrainer
+    sc = _scenario("single")
+    state, hist = run(sc, rounds=2)
+    tr = FederatedTrainer(sc.cfg, sc.init_tree(), sc.data)
+    tr.run(rounds=2, log_every=0)
+    assert tr.history == hist
+    _assert_states_identical(tr.state, state)
+    with pytest.raises(ValueError, match="round index"):
+        tr.round(7)
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError, match="topology"):
+        Scenario(topology="nope")
+    with pytest.raises(ValueError, match="partitioner"):
+        Scenario(partitioner="nope")
+    with pytest.raises(ValueError, match="aggregator"):
+        Scenario(aggregator="nope")
+    with pytest.raises(ValueError, match="client"):
+        Scenario(client="nope")
+    # handover forbids client algorithms with global server state
+    with pytest.raises(ValueError, match="dtssl"):
+        Scenario(topology="handover", client="fedco", aggregator="flsimco")
+    # the legacy fedco alias must not silently override an explicit client
+    with pytest.raises(ValueError, match="legacy alias"):
+        Scenario(aggregator="fedco", client="dtssl")
+    assert Scenario(aggregator="fedco").cfg.client == "fedco"
+    assert Scenario(aggregator="fedco", client="fedco").cfg.client == "fedco"

@@ -98,12 +98,13 @@ def test_handover_migrates_and_syncs(tiny_world):
     assert sum(h["n_handovers"] for h in hist) >= 1
     assert [h["synced"] for h in hist] == [False, True, False, True]
     # after a sync round every RSU holds the merged model, and the
-    # evaluation snapshot coincides with it
-    _assert_trees_close(topo.rsu_models[0], topo.rsu_models[1], atol=0)
-    _assert_trees_close(topo.region_view(), topo.rsu_models[0], atol=1e-5)
+    # evaluation snapshot coincides with it (motion state lives in FLState)
+    rsu_models = tr.state.topo["rsu_models"]
+    _assert_trees_close(rsu_models[0], rsu_models[1], atol=0)
+    _assert_trees_close(topo.region_view(tr.state), rsu_models[0], atol=1e-5)
     # positions stayed on the ring road
-    assert np.all(topo.positions >= 0) and np.all(
-        topo.positions < topo.road_length)
+    positions = tr.state.topo["positions"]
+    assert np.all(positions >= 0) and np.all(positions < topo.road_length)
 
 
 def test_mesh_two_stage_collective_through_trainer(tiny_world):
