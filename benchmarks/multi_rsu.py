@@ -72,9 +72,14 @@ def main():
             topo = HandoverMultiRSU(n_rsus=n_rsus, rsu_range=500.0,
                                     round_duration=30.0, sync_every=2)
             sc = Scenario(topology=topo, **base)
-            # sequential client path: handover cohort sizes vary per round,
-            # so the vmapped path would recompile mid-measurement
-            us = time_rounds(sc, args.rounds, parallel=False)
+            # vmapped bucketed path (the default): cohort sizes vary per
+            # round but padding to power-of-two buckets bounds compiles.
+            # Pre-warm every bucket so no compile lands in the timed
+            # window — benchmarks/round_engine.py isolates list vs
+            # CohortBatch and prices the compiles themselves
+            from round_engine import _warm_buckets
+            _warm_buckets(sc)
+            us = time_rounds(sc, args.rounds, parallel=True)
             emit("topology/handover/round", us,
                  f"V={n_vehicles};R={n_rsus}")
             sys.stdout.flush()

@@ -1,0 +1,199 @@
+"""Round-engine benchmark: list path vs device-resident CohortBatch path.
+
+Times rounds/sec and counts cohort-step compiles for the client-boundary
+variants across the three topologies:
+
+  list    parallel=False — the sequential per-client reference: one jit
+          dispatch + one `float(loss)` sync per client (the path
+          handover was stuck on before bucketing).
+  naive   (handover only) parallel=True with bucketed=False — the
+          vmapped step at each group's EXACT size. Vehicle motion keeps
+          producing new cohort sizes, so this path keeps paying fresh
+          XLA compiles; its timed window deliberately includes them
+          because that IS its steady state. This is the failure mode
+          that forced handover onto the sequential path.
+  cohort  parallel=True — the stacked `CohortBatch` engine: per-group
+          vmapped dispatch padded to power-of-two buckets, masked-weight
+          aggregation on the stacked leaves, one device fetch per round.
+          All (<= ceil(log2(V)) + 1) bucket sizes are pre-warmed, so the
+          timed window is steady state — bounded compiles are the point.
+
+Compile counts come from the vmapped step's jit cache
+(`clients.cohort_step_cache_size`). Note for CPU runs: XLA-CPU gains
+little from batching an already compute-bound cohort (the cores
+saturate either way), so cohort-vs-list hovers near 1x for single/multi
+and the handover bucket padding (up to ~1.5x extra client-slots) is
+paid in full — while XLA-CPU recompiles of the small step are cheap
+enough that the naive path partially amortizes them. The >= 2x target
+for the cohort path is an accelerator-backend claim, where cohort
+batching amortizes (and each XLA:TPU compile costs minutes, making the
+naive path unusable); what this bench pins on every backend is the
+compile BOUND — the cohort path never exceeds
+ceil(log2(vehicles_per_round)) + 1 cohort-step compiles per topology,
+the naive path grows without bound.
+
+  PYTHONPATH=src python benchmarks/round_engine.py [--rounds 3]
+
+Writes benchmarks/results/BENCH_round_engine.json (uploaded as a CI
+artifact by the benchmark smoke step).
+"""
+import argparse
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import build_world, emit, save_json
+
+
+def _warm_sizes(scenario):
+    """The cohort-step sizes this topology actually compiles: the fixed
+    cohort (single), the round-robin group sizes (multi), or the
+    power-of-two buckets (handover). The naive unbucketed handover has
+    no warmable set — new sizes keep appearing; that IS its cost."""
+    from repro.core.cohort import bucket_size
+    from repro.core.topology import HandoverMultiRSU, MultiRSU
+
+    topo, V = scenario.topology, scenario.cfg.vehicles_per_round
+    if isinstance(topo, HandoverMultiRSU):
+        if not topo.bucketed:
+            return []
+        return sorted({bucket_size(s) for s in range(1, V + 1)})
+    if isinstance(topo, MultiRSU):
+        counts = np.bincount(np.arange(V) % topo.n_rsus)
+        return sorted({int(c) for c in counts if c})
+    return [V]
+
+
+def _warm_buckets(scenario):
+    """Pre-compile every cohort-step size the run can hit, so the timed
+    window measures steady-state rounds/sec (the bounded compile set is
+    the point of bucketing — pay it once, up front). Uses the real
+    scheduler's lr so the warm entries are the ones the rounds reuse
+    (a python-float lr is a different jit cache key)."""
+    from repro.core.clients import CLIENT_UPDATES
+
+    cfg = scenario.cfg
+    client = CLIENT_UPDATES[cfg.client]
+    tree = scenario.init_tree()
+    lr = scenario.lr_fn(0)
+    # image shape/dtype from the real dataset — a hardcoded shape would
+    # silently warm the wrong jit entries and let compiles leak into the
+    # timed window
+    sample = np.asarray(scenario.data[0][:1])
+    for m in _warm_sizes(scenario):
+        images = jnp.zeros((1, cfg.batch_size) + sample.shape[1:],
+                           sample.dtype)
+        keys = [jax.random.PRNGKey(0)]
+        cohort, _ = client.run_cohort(cfg, tree, None, images, keys, lr,
+                                      parallel=True, pad_to=m)
+        jax.block_until_ready(cohort.losses)
+
+
+def time_path(scenario, rounds: int, parallel: bool, warm: bool):
+    """(us_per_round, rounds_per_sec, cohort-step compile count)."""
+    from repro.core.clients import (cohort_step_cache_size,
+                                    reset_cohort_step_caches)
+    from repro.core.scenario import run_round
+
+    reset_cohort_step_caches()
+    if warm:
+        _warm_buckets(scenario)
+    state = scenario.init_state()
+    state, _ = run_round(state, scenario, parallel=parallel)   # engine warmup
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        state, _ = run_round(state, scenario, parallel=parallel)
+    dt = (time.perf_counter() - t0) / rounds
+    return dt * 1e6, 1.0 / dt, cohort_step_cache_size(scenario.cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--vehicles", type=int, default=8,
+                    help="vehicles_per_round (acceptance target: >= 8)")
+    ap.add_argument("--rsus", type=int, default=2)
+    ap.add_argument("--skip-naive", action="store_true",
+                    help="skip the recompiling naive handover path "
+                         "(it pays multi-minute XLA compiles by design)")
+    args = ap.parse_args()
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
+
+    from repro.core.scenario import Scenario
+    from repro.core.topology import HandoverMultiRSU, MultiRSU, SingleRSU
+
+    V = args.vehicles
+    compile_bound = int(math.ceil(math.log2(V))) + 1
+    # fleet must exceed the per-round cohort (sampling is replace=False)
+    n_fleet = max(24, 2 * V)
+    x, y, parts, tree = build_world(n_vehicles=n_fleet, n_per_class=40,
+                                    iid=True, alpha=0.0)
+    base = dict(data=[x[p] for p in parts], global_tree=tree,
+                n_vehicles=n_fleet,
+                vehicles_per_round=V, batch_size=args.batch,
+                rounds=args.rounds + 1, local_iters=1, seed=0)
+    handover_kw = dict(n_rsus=args.rsus, rsu_range=500.0,
+                       round_duration=30.0, sync_every=2)
+    topologies = {
+        "single": SingleRSU(),
+        "multi": MultiRSU(n_rsus=args.rsus),
+        "handover": HandoverMultiRSU(**handover_kw),
+    }
+
+    results = {"config": {"vehicles_per_round": V, "n_rsus": args.rsus,
+                          "batch_size": args.batch, "rounds": args.rounds,
+                          "backend": jax.default_backend(),
+                          "compile_bound": compile_bound}}
+    for name, topo in topologies.items():
+        sc = Scenario(topology=topo, **base)
+        paths = [("list", sc, False, False), ("cohort", sc, True, True)]
+        if name == "handover" and not args.skip_naive:
+            naive_sc = Scenario(
+                topology=HandoverMultiRSU(bucketed=False, **handover_kw),
+                **base)
+            paths.insert(1, ("naive", naive_sc, True, False))
+        entry = {}
+        for path, path_sc, parallel, warm in paths:
+            us, rps, compiles = time_path(path_sc, args.rounds, parallel,
+                                          warm)
+            entry[path] = {"us_per_round": us, "rounds_per_sec": rps,
+                           "cohort_step_compiles": compiles}
+            emit(f"round_engine/{name}/{path}", us,
+                 f"V={V};R={args.rsus};compiles={compiles}")
+            sys.stdout.flush()
+        entry["speedup_vs_list"] = (entry["list"]["us_per_round"]
+                                    / entry["cohort"]["us_per_round"])
+        if "naive" in entry:
+            entry["speedup_vs_naive"] = (entry["naive"]["us_per_round"]
+                                         / entry["cohort"]["us_per_round"])
+        entry["within_compile_bound"] = \
+            entry["cohort"]["cohort_step_compiles"] <= compile_bound
+        results[name] = entry
+        emit(f"round_engine/{name}/speedup_vs_list",
+             entry["speedup_vs_list"], "")
+        sys.stdout.flush()
+
+    save_json("BENCH_round_engine.json", results)
+    h = results["handover"]
+    summary = [f"vs list {h['speedup_vs_list']:.2f}x"]
+    if "speedup_vs_naive" in h:
+        summary.append(f"vs naive(recompiling) "
+                       f"{h['speedup_vs_naive']:.2f}x (target >= 2x)")
+    print(f"# handover cohort-path speedup: {', '.join(summary)}; "
+          f"compiles within bound "
+          f"(<= {compile_bound}): "
+          f"{all(results[t]['within_compile_bound'] for t in topologies)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,11 +13,14 @@ Two implementations of each scheme:
 Registry (``AGGREGATORS``, the names ``FLConfig.aggregator`` accepts).
 Every entry has the uniform dispatch signature
 
-    aggregate(client_trees, velocities, blur, cfg) -> tree
+    aggregate(cohort: CohortBatch, cfg) -> tree
 
-so topologies (core/topology.py) route Step 4 through the registry with
-zero per-scheme branching; the underlying ``aggregate_*`` functions keep
-their minimal signatures for direct use.
+where `cohort` carries the STACKED client trees, the validity mask of a
+bucketed (padded) cohort, and device-resident blur/velocities
+(core/cohort.py) — so topologies route Step 4 through the registry with
+zero per-scheme branching and zero unstack/restack churn; the underlying
+``aggregate_*`` functions keep their minimal list-based signatures for
+direct use.
 
   flsimco  — blur-weighted (Eq. 11), weight_n ∝ (ΣL − L_n)/ΣL — the paper
   fedavg   — baseline1: uniform average (McMahan et al.)
@@ -32,8 +35,9 @@ is accepted as a legacy alias that FLConfig normalizes to
 ``client="fedco", aggregator="fedavg"``.)
 
 Host-side weighted sums route through the fused Pallas kernel
-(kernels/wagg.py) on TPU — one HBM pass over N stacked models instead of
-N tree-map passes — and fall back to the jnp tree-map path off-TPU.
+(kernels/wagg.py) on TPU — one HBM pass over the stacked cohort tensor
+(with the validity mask applied in-kernel) instead of N tree-map passes —
+and fall back to the jnp tree-map path off-TPU.
 ``wagg_backend("interpret")`` forces the kernel in interpret mode (used by
 tests/test_topology.py to exercise the kernel path on CPU).
 """
@@ -80,26 +84,45 @@ def _resolve_wagg_backend() -> str:
     return "fused" if jax.default_backend() == "tpu" else "tree"
 
 
-def _weighted_tree_sum(trees: Sequence, weights) -> object:
-    """sum_n w_n * tree_n (weights: (N,) array).
+def _weighted_stacked_sum(stacked, weights, mask=None) -> object:
+    """sum_m w_m * tree[m] over the leading cohort axis of a STACKED tree.
 
     Every host-side aggregation scheme funnels through here, so this is
     the single dispatch point between the fused kernel and the tree-map
-    reference path.
+    reference path. `mask` (m,) zeroes padding rows of a bucketed cohort
+    (w*1.0 == w and w*0.0 == 0.0, so a masked padded sum is bit-exact
+    versus the unpadded sum over the valid prefix).
     """
     weights = jnp.asarray(weights, jnp.float32)
     backend = _resolve_wagg_backend()
     if backend != "tree":
         from repro.kernels import ops as _kops  # deferred: keep core import-light
-        return _kops.wagg_tree(trees, weights,
-                               interpret=(backend == "interpret"))
+        return _kops.wagg_stacked(stacked, weights, mask=mask,
+                                  interpret=(backend == "interpret"))
 
-    def comb(*leaves):
-        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
-        out = jnp.tensordot(weights, stacked, axes=1)
-        return out.astype(leaves[0].dtype)
+    if mask is not None:
+        weights = weights * jnp.asarray(mask, jnp.float32)
 
-    return jax.tree.map(comb, *trees)
+    def comb(leaf):
+        out = jnp.tensordot(weights, leaf.astype(jnp.float32), axes=1)
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(comb, stacked)
+
+
+def _weighted_tree_sum(trees: Sequence, weights) -> object:
+    """sum_n w_n * tree_n over a LIST of pytrees (legacy boundary): one
+    stack, then the stacked dispatch above."""
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+    return _weighted_stacked_sum(stacked, weights)
+
+
+def cohort_weighted_sum(cohort, w_valid) -> object:
+    """Weighted sum of a `CohortBatch`: (n,) weights over the valid rows,
+    zero-padded to the bucketed size, applied to the stacked trees with
+    the cohort's validity mask — no unstack/restack anywhere."""
+    return _weighted_stacked_sum(cohort.trees, cohort.padded_weights(w_valid),
+                                 mask=cohort.mask)
 
 
 def flsimco_weights(blur_levels, normalize: bool = True):
@@ -137,18 +160,29 @@ def aggregate_fedavg(trees: Sequence, data_sizes=None):
     return _weighted_tree_sum(trees, w)
 
 
-def aggregate_discard(trees: Sequence, velocities, threshold: float):
-    """Baseline2: drop clients with v > threshold, FedAvg the rest.
+def discard_weights(blur_levels, threshold: float):
+    """Baseline2 weights: uniform over clients with blur L <= threshold.
 
     If every client exceeds the threshold, falls back to plain FedAvg
-    (the RSU cannot emit an empty model).
+    weights (the RSU cannot emit an empty model).
     """
-    v = jnp.asarray(velocities, jnp.float32)
-    keep = (v <= threshold).astype(jnp.float32)
+    L = jnp.asarray(blur_levels, jnp.float32)
+    keep = (L <= threshold).astype(jnp.float32)
     n_keep = jnp.sum(keep)
-    w = jnp.where(n_keep > 0, keep / jnp.maximum(n_keep, 1.0),
-                  jnp.full_like(keep, 1.0 / keep.shape[0]))
-    return _weighted_tree_sum(trees, w)
+    return jnp.where(n_keep > 0, keep / jnp.maximum(n_keep, 1.0),
+                     jnp.full_like(keep, 1.0 / keep.shape[0]))
+
+
+def aggregate_discard(trees: Sequence, blur_levels, threshold: float):
+    """Baseline2: drop clients whose BLUR LEVEL (Eq. 2) exceeds
+    `threshold`, FedAvg the rest.
+
+    The threshold is in blur units, matching the registry contract and
+    the mesh path (launch/steps.py); `FLConfig.blur_threshold` defaults
+    to the blur level of the paper's 100 km/h cutoff
+    (`mobility.BLUR_KMH_100`).
+    """
+    return _weighted_tree_sum(trees, discard_weights(blur_levels, threshold))
 
 
 # --------------------------------------------------------------------------
@@ -181,31 +215,40 @@ def aggregate_inverse(trees: Sequence, blur_levels, eps: float = 1.0):
     return _weighted_tree_sum(trees, inverse_weights(blur_levels, eps))
 
 
-# Uniform dispatch signature: (client_trees, velocities, blur, cfg).
-# `velocities`/`blur` are per-client arrays; `cfg` supplies the scheme's
-# knobs (normalize_weights, blur_threshold). FLConfig validates its
-# `aggregator` field against this dict, so adding an entry here is the
-# whole story for a new scheme.
+# Uniform dispatch signature: (cohort, cfg) where `cohort` is a
+# `CohortBatch` (stacked trees + validity mask + device-resident
+# blur/velocities) and `cfg` supplies the scheme's knobs
+# (normalize_weights, blur_threshold). Weights are computed on the
+# static valid slice (`cohort.valid_blur`) and zero-padded, so a
+# bucketed (padded) cohort aggregates bit-exactly like an unpadded one
+# (tests/test_cohort.py). FLConfig validates its `aggregator` field
+# against this dict, so adding an entry here is the whole story for a
+# new scheme.
 
-def _disp_flsimco(trees, velocities, blur, cfg):
-    return aggregate_flsimco(trees, blur,
-                             getattr(cfg, "normalize_weights", True))
-
-
-def _disp_fedavg(trees, velocities, blur, cfg):
-    return aggregate_fedavg(trees)
-
-
-def _disp_discard(trees, velocities, blur, cfg):
-    return aggregate_discard(trees, velocities, cfg.blur_threshold)
+def _disp_flsimco(cohort, cfg):
+    w = flsimco_weights(cohort.valid_blur,
+                        getattr(cfg, "normalize_weights", True))
+    return cohort_weighted_sum(cohort, w)
 
 
-def _disp_softmax(trees, velocities, blur, cfg):
-    return aggregate_softmax(trees, blur)
+def _disp_fedavg(cohort, cfg):
+    return cohort_weighted_sum(
+        cohort, jnp.full((cohort.n,), 1.0 / cohort.n, jnp.float32))
 
 
-def _disp_inverse(trees, velocities, blur, cfg):
-    return aggregate_inverse(trees, blur)
+def _disp_discard(cohort, cfg):
+    # thresholds the Eq.-2 BLUR LEVEL (not raw velocity) against
+    # cfg.blur_threshold, as the registry documents
+    return cohort_weighted_sum(
+        cohort, discard_weights(cohort.valid_blur, cfg.blur_threshold))
+
+
+def _disp_softmax(cohort, cfg):
+    return cohort_weighted_sum(cohort, softmax_weights(cohort.valid_blur))
+
+
+def _disp_inverse(cohort, cfg):
+    return cohort_weighted_sum(cohort, inverse_weights(cohort.valid_blur))
 
 
 AGGREGATORS = {

@@ -9,10 +9,18 @@ entries in one registry with one signature, so every topology runs any
 client algorithm through the same three hooks:
 
   init_state(cfg, global_tree)           -> client_state pytree (or None)
-  run_cohort(cfg, tree, client_state,
-             batches, keys, lr, parallel) -> (client_trees, losses, uploads)
+  run_cohort(cfg, tree, client_state, batches,
+             keys, lr, parallel, pad_to) -> (CohortBatch, uploads)
   finalize(cfg, client_state,
            aggregated_tree, uploads)      -> new client_state
+
+`run_cohort` returns a device-resident `CohortBatch` (core/cohort.py):
+the vmapped result stays STACKED — no per-client unstacking, no
+`float(loss)` device syncs; the topology fetches losses once per round
+when it builds the record. `pad_to` pads the cohort to a bucketed size
+(replicating the last batch/key; the mask marks the valid prefix) so
+variable-size cohorts — the handover topology — reuse a bounded set of
+compiled cohort-step sizes instead of recompiling per size.
 
 `uploads` is whatever extra payload the vehicles send besides parameters
 (FedCo: the k-value batches the RSU merges into the global queue; DT-SSL:
@@ -21,7 +29,9 @@ topology's job, through the ``AGGREGATORS`` registry — client algorithm
 and aggregation scheme are orthogonal axes of a `Scenario`.
 
 Jitted client steps are cached per (hyperparameter tuple), not per
-trainer, so seed/aggregator/round-count sweeps reuse one compilation.
+trainer, so seed/aggregator/round-count sweeps reuse one compilation;
+`cohort_step_cache_size(cfg)` exposes how many cohort shapes have been
+compiled (benchmarks/round_engine.py asserts the bucketing bound).
 """
 from __future__ import annotations
 
@@ -29,9 +39,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import ssl
+from repro.core.cohort import CohortBatch
 from repro.core.dt_loss import dt_loss_matrix, info_nce_loss
 from repro.core.state import FLConfig
 from repro.models.resnet import resnet_apply
@@ -131,7 +141,15 @@ def _cached_local_steps(local_iters, momentum, weight_decay,
     f = make_local_train_step(FLConfig(
         local_iters=local_iters, momentum=momentum,
         weight_decay=weight_decay, tau_alpha=tau_alpha, tau_beta=tau_beta))
-    return jax.jit(f), jax.jit(jax.vmap(f, in_axes=(0, 0, 0, None)))
+    # The cohort step vmaps with the init tree UNBATCHED (in_axes=None):
+    # every client in a cohort starts the round from the same model, so
+    # broadcasting N weight copies (the old form) only forced XLA into
+    # batched-weight (grouped) convolutions for ops whose weights are
+    # genuinely shared. vmap propagates the batch axis lazily — the
+    # first local iteration runs shared-weight, later iterations (whose
+    # trees have diverged per client) batched — and the result is
+    # bit-exact with the sequential path (tests/test_federation.py).
+    return jax.jit(f), jax.jit(jax.vmap(f, in_axes=(None, 0, 0, None)))
 
 
 def _jitted_local_steps(cfg: FLConfig):
@@ -151,9 +169,43 @@ def _jitted_moco_step(cfg: FLConfig):
                              cfg.weight_decay, cfg.moco_momentum)
 
 
+def cohort_step_cache_size(cfg: FLConfig) -> int:
+    """Number of compiled variants of cfg's VMAPPED cohort step — one per
+    distinct (cohort size, batch shape). The handover bucketing policy
+    bounds this by ceil(log2(vehicles_per_round)) + 1 per topology
+    (benchmarks/round_engine.py reports it)."""
+    _, vlocal = _jitted_local_steps(cfg)
+    return vlocal._cache_size()
+
+
+def reset_cohort_step_caches() -> None:
+    """Drop every cached/compiled client step (benchmark isolation)."""
+    _cached_local_steps.cache_clear()
+    _cached_moco_step.cache_clear()
+
+
 # --------------------------------------------------------------------------
 # registry entries
 # --------------------------------------------------------------------------
+
+def _pad_cohort_inputs(batches, keys, pad_to: int):
+    """Pad stacked batches/keys from n to pad_to rows by replicating the
+    last valid row — NO RNG is consumed, so a padded cohort draws exactly
+    the same host/jax random streams as an unpadded one. The replicated
+    rows train on real (finite) data and are masked out of every
+    aggregation downstream."""
+    n = batches.shape[0]
+    pad = pad_to - n
+    if pad < 0:
+        raise ValueError(f"pad_to={pad_to} smaller than cohort size {n}")
+    if pad == 0:
+        return batches, keys
+    batches = jnp.concatenate(
+        [batches, jnp.broadcast_to(batches[-1:], (pad,) + batches.shape[1:])])
+    keys = jnp.concatenate(
+        [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])])
+    return batches, keys
+
 
 class DTSSLClient:
     """FLSimCo Step 2: dual-temperature contrastive SSL. Stateless."""
@@ -164,28 +216,30 @@ class DTSSLClient:
         return None
 
     def run_cohort(self, cfg: FLConfig, tree, client_state, batches, keys,
-                   lr, parallel: bool = True):
+                   lr, parallel: bool = True, pad_to: int | None = None):
         """Run one cohort of clients from init model `tree`.
 
-        `parallel=True` vmaps the cohort over a stacked tree; the
-        sequential path is tested equivalent (tests/test_federation.py).
+        `parallel=True` vmaps the cohort over a stacked tree and returns
+        the result STACKED (a `CohortBatch`) — no unstacking, no host
+        syncs; `pad_to` additionally pads the cohort to a bucketed size
+        so variable-size cohorts share compilations. The sequential path
+        is the tested-equivalent reference (tests/test_federation.py,
+        tests/test_topology.py).
         """
         local, vlocal = _jitted_local_steps(cfg)
         n = len(keys)
-        if parallel:
-            stacked = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
-            trees, losses = vlocal(stacked, batches, jnp.stack(keys), lr)
-            client_trees = [jax.tree.map(lambda x: x[i], trees)
-                            for i in range(n)]
-            losses = [float(l) for l in np.asarray(losses)]
-        else:
+        if not parallel:
             client_trees, losses = [], []
             for i in range(n):
                 t, l = local(tree, batches[i], keys[i], lr)
                 client_trees.append(t)
-                losses.append(float(l))
-        return client_trees, losses, None
+                losses.append(l)
+            return CohortBatch.from_list(client_trees, losses), None
+        m = n if pad_to is None else pad_to
+        keys_arr = keys if hasattr(keys, "shape") else jnp.stack(list(keys))
+        batches, keys_arr = _pad_cohort_inputs(batches, keys_arr, m)
+        trees, losses = vlocal(tree, batches, keys_arr, lr)
+        return CohortBatch.from_stacked(trees, losses, n=n), None
 
     def finalize(self, cfg: FLConfig, client_state, aggregated_tree, uploads):
         return None
@@ -211,9 +265,11 @@ class FedCoClient:
                 "queue": queue}
 
     def run_cohort(self, cfg: FLConfig, tree, client_state, batches, keys,
-                   lr, parallel: bool = True):
+                   lr, parallel: bool = True, pad_to: int | None = None):
         # sequential by design: the MoCo step threads a key-encoder EMA
-        # whose updates are not batchable across clients
+        # whose updates are not batchable across clients — the result is
+        # still stacked into a CohortBatch so aggregation sees one
+        # uniform device-resident boundary (losses stay on device)
         moco = _jitted_moco_step(cfg)
         client_trees, losses, kvecs = [], [], []
         for i in range(len(keys)):
@@ -221,9 +277,9 @@ class FedCoClient:
                                   client_state["queue"], batches[i],
                                   keys[i], lr)
             client_trees.append(t)
-            losses.append(float(loss))
+            losses.append(loss)
             kvecs.append(kv)
-        return client_trees, losses, kvecs
+        return CohortBatch.from_list(client_trees, losses), kvecs
 
     def finalize(self, cfg: FLConfig, client_state, aggregated_tree, uploads):
         return {"key_tree": jax.tree.map(jnp.copy, aggregated_tree),

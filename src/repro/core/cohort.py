@@ -1,0 +1,216 @@
+"""`CohortBatch` — the device-resident currency of a federated round.
+
+Before this abstraction every layer boundary exchanged cohorts as Python
+lists of per-client pytrees: the client layer unstacked its vmapped
+result into N host-side trees (N `float(loss)` device syncs per round)
+and the aggregation layer immediately re-stacked the same leaves before
+the fused `wagg` kernel saw them. A `CohortBatch` keeps the cohort
+stacked end to end:
+
+  trees       pytree whose every leaf has a leading cohort axis (m, ...)
+  losses      (m,) per-client mean local loss, device-resident
+  mask        (m,) float32 validity; 1.0 for real clients, 0.0 padding
+  n           static count of valid clients — valid rows are ALWAYS the
+              prefix [0, n), padding (if any) the suffix [n, m)
+  velocities  (m,) per-client velocities (attached by the topology)
+  blur        (m,) Eq.-2 blur levels (attached by the topology)
+
+The valid-prefix convention is load-bearing: `n` is a static Python int,
+so `valid_*` views are static slices — aggregation weights are computed
+on exactly the same values as an unpadded cohort, which is what makes
+padded/masked aggregation bit-exact versus unpadded
+(tests/test_cohort.py). Padding rows replicate the last valid row, so
+they are always finite; masked weights zero them out of every sum.
+
+Padding exists for the handover topology: per-RSU cohort sizes vary with
+vehicle positions every round, and the vmapped cohort step specializes
+on the cohort size. Bucketing each group up to the next power of two
+(`bucket_size`) bounds the number of distinct compiled cohort-step sizes
+by ceil(log2(vehicles_per_round)) + 1 while keeping every group on the
+vmapped path (DESIGN.md §CohortBatch).
+
+`CohortBatch` is registered as a jax pytree (with `n` static), so
+`jax.device_get(cohort)` fetches losses + stats in one transfer and tree
+ops map over the stacked leaves directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_size(n: int) -> int:
+    """Smallest power of two >= n — the padded cohort sizes the vmapped
+    client step compiles for (a bounded set; see module docstring)."""
+    if n < 1:
+        raise ValueError(f"cohort size must be >= 1, got {n}")
+    m = 1
+    while m < n:
+        m *= 2
+    return m
+
+
+@dataclass(frozen=True)
+class CohortBatch:
+    """Stacked cohort state (leading axis = padded cohort size m)."""
+
+    trees: Any
+    losses: jnp.ndarray
+    mask: jnp.ndarray
+    n: int
+    velocities: Optional[jnp.ndarray] = None
+    blur: Optional[jnp.ndarray] = None
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_stacked(cls, trees, losses, n: Optional[int] = None,
+                     **stats) -> "CohortBatch":
+        """Wrap already-stacked leaves; rows [n, m) are padding."""
+        m = int(losses.shape[0])
+        n = m if n is None else int(n)
+        if not 1 <= n <= m:
+            raise ValueError(f"valid count {n} not in [1, {m}]")
+        mask = (jnp.arange(m) < n).astype(jnp.float32)
+        return cls(trees=trees, losses=losses, mask=mask, n=n, **stats)
+
+    @classmethod
+    def from_list(cls, trees: Sequence, losses, **stats) -> "CohortBatch":
+        """Stack a list of per-client pytrees (the sequential reference
+        path and legacy callers)."""
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+        losses = jnp.stack([jnp.asarray(l) for l in losses]) \
+            if isinstance(losses, (list, tuple)) else jnp.asarray(losses)
+        return cls.from_stacked(stacked, losses, n=len(trees), **stats)
+
+    @classmethod
+    def concat(cls, cohorts: Sequence["CohortBatch"]) -> "CohortBatch":
+        """Concatenate the VALID rows of several cohorts (drops padding).
+
+        Stats (velocities/blur) are concatenated when present on every
+        input, else dropped.
+        """
+        trees = jax.tree.map(lambda *ls: jnp.concatenate(ls),
+                             *[c.valid_trees for c in cohorts])
+        losses = jnp.concatenate([c.valid_losses for c in cohorts])
+        stats = {}
+        for f in ("velocities", "blur"):
+            vals = [getattr(c, f) for c in cohorts]
+            if all(v is not None for v in vals):
+                stats[f] = jnp.concatenate(
+                    [v[:c.n] for v, c in zip(vals, cohorts)])
+        return cls.from_stacked(trees, losses, **stats)
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def size(self) -> int:
+        """Padded cohort size m (the stacked leading axis)."""
+        return int(self.mask.shape[0])
+
+    @property
+    def valid_trees(self):
+        """Stacked trees restricted to the n valid rows (static slice)."""
+        if self.n == self.size:
+            return self.trees
+        return jax.tree.map(lambda x: x[:self.n], self.trees)
+
+    @property
+    def valid_losses(self):
+        return self.losses[:self.n]
+
+    @property
+    def valid_blur(self):
+        if self.blur is None:
+            raise ValueError("cohort has no blur levels attached; the "
+                             "topology must call with_stats() first")
+        return self.blur[:self.n]
+
+    @property
+    def valid_velocities(self):
+        if self.velocities is None:
+            raise ValueError("cohort has no velocities attached; the "
+                             "topology must call with_stats() first")
+        return self.velocities[:self.n]
+
+    def with_stats(self, velocities=None, blur=None) -> "CohortBatch":
+        """Attach per-client velocities/blur, padded (by replicating the
+        last value) to the cohort's padded size. Stats not passed keep
+        their current value (incremental attachment never wipes)."""
+        if velocities is None:
+            velocities = self.velocities
+        if blur is None:
+            blur = self.blur
+
+        def pad(x):
+            if x is None:
+                return None
+            x = jnp.asarray(x)
+            if x.shape[0] == self.size:
+                return x
+            if x.shape[0] != self.n:
+                raise ValueError(f"stat length {x.shape[0]} matches "
+                                 f"neither n={self.n} nor m={self.size}")
+            reps = jnp.broadcast_to(x[-1:], (self.size - self.n,))
+            return jnp.concatenate([x, reps])
+
+        return dataclasses.replace(self, velocities=pad(velocities),
+                                   blur=pad(blur))
+
+    def take(self, idx) -> "CohortBatch":
+        """Gather a sub-cohort by valid-row indices (device-side gather —
+        the handover upload step regroups clients without unstacking).
+        Gathers from the valid views, so padding rows are unreachable."""
+        idx = jnp.asarray(idx)
+        trees = jax.tree.map(lambda x: x[idx], self.valid_trees)
+        pick = lambda x: None if x is None else x[:self.n][idx]
+        return CohortBatch.from_stacked(
+            trees, self.valid_losses[idx],
+            velocities=pick(self.velocities), blur=pick(self.blur))
+
+    def padded_weights(self, w_valid) -> jnp.ndarray:
+        """(n,) weights over the valid rows -> (m,) with zero padding.
+
+        Weights are computed on the static valid slice and only then
+        padded, so the padded weighted sum is bit-exact versus the
+        unpadded one (appending zero-weight finite rows to a linear
+        reduction adds exact +0.0 terms).
+        """
+        w = jnp.asarray(w_valid, jnp.float32).reshape(-1)
+        if w.shape[0] != self.n:
+            raise ValueError(f"got {w.shape[0]} weights for {self.n} "
+                             f"valid clients")
+        if self.size == self.n:
+            return w
+        return jnp.concatenate(
+            [w, jnp.zeros((self.size - self.n,), jnp.float32)])
+
+    # -- back-compat ---------------------------------------------------------
+
+    def unstack(self) -> list:
+        """Materialize the n valid per-client trees as a Python list.
+
+        Kept only for legacy/reference consumers — the round engine never
+        calls this; it is the old list-of-pytrees boundary this type
+        replaces.
+        """
+        return [jax.tree.map(lambda x: x[i], self.trees)
+                for i in range(self.n)]
+
+
+def _flatten(c: CohortBatch):
+    children = (c.trees, c.losses, c.mask, c.velocities, c.blur)
+    return children, c.n
+
+
+def _unflatten(n, children):
+    trees, losses, mask, velocities, blur = children
+    return CohortBatch(trees=trees, losses=losses, mask=mask, n=n,
+                       velocities=velocities, blur=blur)
+
+
+jax.tree_util.register_pytree_node(CohortBatch, _flatten, _unflatten)

@@ -25,22 +25,39 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import (_weighted_tree_sum, flsimco_weights,
-                                    weighted_psum_tree)
+from repro.core.aggregation import (_weighted_tree_sum, cohort_weighted_sum,
+                                    flsimco_weights, weighted_psum_tree)
+from repro.core.cohort import CohortBatch
 
 
-def aggregate_hierarchical(groups: Sequence[Sequence], blur_groups: Sequence,
+def _as_cohort(group, blur) -> CohortBatch:
+    """Normalize one RSU group to a `CohortBatch`: either it already is
+    one (the round engine's stacked path — blur travels inside it), or a
+    legacy (list of client trees, blur array) pair that gets stacked."""
+    if isinstance(group, CohortBatch):
+        return group
+    blur = jnp.asarray(blur, jnp.float32)
+    return CohortBatch.from_list(
+        group, jnp.zeros((len(group),), jnp.float32), blur=blur)
+
+
+def aggregate_hierarchical(groups: Sequence, blur_groups: Sequence = None,
                            count_scaled: bool = True):
-    """groups[r] = list of client trees at RSU r; blur_groups[r] = (N_r,)
-    blur levels. Returns the region-level global model."""
+    """groups[r] = the cohort at RSU r — a `CohortBatch` (stacked leaves +
+    mask, blur attached) or a legacy list of client trees with
+    blur_groups[r] = (N_r,) blur levels. Returns the region-level global
+    model. Level-1 weights are computed on each cohort's valid slice, so
+    padded (bucketed) cohorts aggregate bit-exactly like unpadded ones."""
+    cohorts = [_as_cohort(g, None if blur_groups is None else b)
+               for g, b in zip(groups, blur_groups or [None] * len(groups))]
     rsu_models = []
     rsu_blur = []
     rsu_count = []
-    for trees, blur in zip(groups, blur_groups):
-        blur = jnp.asarray(blur, jnp.float32)
-        rsu_models.append(_weighted_tree_sum(trees, flsimco_weights(blur)))
+    for cohort in cohorts:
+        blur = cohort.valid_blur
+        rsu_models.append(cohort_weighted_sum(cohort, flsimco_weights(blur)))
         rsu_blur.append(blur.mean())
-        rsu_count.append(len(trees))
+        rsu_count.append(cohort.n)
     W = flsimco_weights(jnp.stack(rsu_blur))
     if count_scaled:
         c = jnp.asarray(rsu_count, jnp.float32)

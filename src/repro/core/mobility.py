@@ -18,7 +18,16 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-KMH_100 = 100.0 / 3.6  # 27.78 m/s — paper's blur threshold for baseline2
+KMH_100 = 100.0 / 3.6  # 27.78 m/s — paper's velocity cutoff for baseline2
+CAMERA_CONST = 0.58    # H*s/Q, Table 1 — the Eq.-2 blur-per-velocity slope
+# The 100 km/h cutoff in BLUR units (Eq. 2 under the Table-1 camera
+# constant): baseline2 ("discard") drops clients whose blur level
+# exceeds this — the blur a camera records at exactly 100 km/h.
+# FLConfig.blur_threshold defaults to it, and launch/steps.py uses it
+# for the mesh-level discard. A scenario with a non-default
+# MobilityModel.camera_const must scale its blur_threshold accordingly
+# (the threshold is a blur level, not a velocity).
+BLUR_KMH_100 = CAMERA_CONST * KMH_100  # ~16.11
 
 
 @dataclass(frozen=True)
@@ -27,7 +36,7 @@ class MobilityModel:
     v_max: float = 41.67
     mu: float = (16.67 + 41.67) / 2
     sigma: float = 5.0
-    camera_const: float = 0.58   # H*s/Q  (Table 1: 0.58)
+    camera_const: float = CAMERA_CONST   # H*s/Q  (Table 1: 0.58)
 
     def pdf(self, v):
         """Truncated Gaussian pdf, Eq. (1)."""
@@ -78,7 +87,8 @@ class MobilityModel:
         return jnp.mod(p + v * dt, road_length)
 
 
-def motion_blur_kernel(v, camera_const: float = 0.58, max_len: int = 9):
+def motion_blur_kernel(v, camera_const: float = CAMERA_CONST,
+                       max_len: int = 9):
     """Horizontal linear motion-blur PSF whose length grows with velocity.
 
     Discretized Eq. (2): blur extent (pixels) = clip(round(L), 1, max_len).
@@ -94,7 +104,8 @@ def motion_blur_kernel(v, camera_const: float = 0.58, max_len: int = 9):
     return w / w.sum()
 
 
-def apply_motion_blur(images, v, camera_const: float = 0.58, max_len: int = 9):
+def apply_motion_blur(images, v, camera_const: float = CAMERA_CONST,
+                      max_len: int = 9):
     """Blur (B,H,W,C) images with the velocity-dependent horizontal PSF."""
     k = motion_blur_kernel(v, camera_const, max_len)          # (max_len,)
     pad = max_len // 2

@@ -26,7 +26,7 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.mobility import KMH_100
+from repro.core.mobility import BLUR_KMH_100
 
 
 @dataclass(frozen=True)
@@ -44,7 +44,7 @@ class FLConfig:
     aggregator: str = "flsimco"   # any AGGREGATORS name (core/aggregation.py)
     client: Optional[str] = None  # any CLIENT_UPDATES name (core/clients.py);
                                   # None selects the default, "dtssl"
-    blur_threshold: float = KMH_100
+    blur_threshold: float = BLUR_KMH_100   # in BLUR units (Eq. 2), not m/s
     moco_momentum: float = 0.99   # FedCo key-encoder EMA (Table 1)
     queue_len: int = 4096         # FedCo global queue (Sec. 5.2)
     feature_dim: int = 128

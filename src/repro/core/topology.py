@@ -31,10 +31,19 @@ is pure — same state in, same state out, nothing mutated.
                     upload's Eq.-11 weight by `stale_discount`. Every
                     `sync_every` rounds the region merges the RSU models.
 
-All three funnel their weighted sums through
-`core.aggregation._weighted_tree_sum`, i.e. the fused Pallas `wagg` kernel
-on TPU (tree-map fallback off-TPU; `wagg_backend("interpret")` forces the
-kernel anywhere).
+Rounds move cohorts between layers as device-resident `CohortBatch`es
+(core/cohort.py): the client layer returns its vmapped result stacked,
+aggregation consumes the stacked leaves + validity mask directly, and
+the per-client payload (losses) crosses to host exactly once per round,
+in the single `jax.device_get` that builds the round record (handover
+additionally fetches a few SMALL per-round arrays — positions, blur,
+per-RSU weights — whose sizes are O(cohort), not O(model)). Handover pads each per-RSU group to a bucketed
+(power-of-two) size so its variable-size cohorts run the vmapped path
+with a bounded set of compiles, bit-exact with the sequential reference
+(tests/test_topology.py). All three topologies funnel their weighted
+sums through `core.aggregation._weighted_stacked_sum`, i.e. the fused
+Pallas `wagg` kernel on TPU (tree-map fallback off-TPU;
+`wagg_backend("interpret")` forces the kernel anywhere).
 """
 from __future__ import annotations
 
@@ -47,6 +56,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core.clients import CLIENT_UPDATES
+from repro.core.cohort import CohortBatch, bucket_size
 from repro.core.hierarchical import (aggregate_hierarchical,
                                      two_stage_weighted_psum)
 from repro.core.mobility import apply_motion_blur
@@ -102,6 +112,17 @@ def _sample_cohort(state, scenario):
     return rng, ids, velocities, lr, key, cks
 
 
+def _record_fetch(losses, velocities):
+    """The one per-client device transfer per round: fetch the record
+    payload (losses + velocities) in a single `device_get`. Losses stay
+    device-resident inside the `CohortBatch` until here; the mean is
+    taken in float64 on host, matching the old per-client `float(loss)`
+    record values bit for bit."""
+    losses_h, v_h = jax.device_get((losses, jnp.asarray(velocities)))
+    return (np.asarray(losses_h, np.float64),
+            np.asarray(v_h).tolist())
+
+
 class Topology:
     """Strategy object: owns the structure of one federated round.
 
@@ -137,15 +158,17 @@ class SingleRSU(Topology):
         rng, ids, velocities, lr, key, cks = _sample_cohort(state, scenario)
         client = CLIENT_UPDATES[cfg.client]
         batches = _draw_batches(rng, scenario, ids, velocities)
-        client_trees, losses, uploads = client.run_cohort(
+        cohort, uploads = client.run_cohort(
             cfg, state.global_tree, state.client_state, batches, cks, lr,
             parallel)
-        blur = mob.blur_level(velocities)
-        new_tree = agg.AGGREGATORS[cfg.aggregator](
-            client_trees, velocities, blur, cfg)
+        cohort = cohort.with_stats(velocities=velocities,
+                                   blur=mob.blur_level(velocities))
+        new_tree = agg.AGGREGATORS[cfg.aggregator](cohort, cfg)
         new_cs = client.finalize(cfg, state.client_state, new_tree, uploads)
+        losses, vels = _record_fetch(cohort.valid_losses,
+                                     cohort.valid_velocities)
         rec = {"round": state.round, "loss": float(np.mean(losses)),
-               "velocities": np.asarray(velocities).tolist(),
+               "velocities": vels,
                "lr": float(lr), "topology": self.name}
         return state.replace(global_tree=new_tree, key=key,
                              host_rng=pack_host_rng(rng),
@@ -213,57 +236,61 @@ class MultiRSU(Topology):
         # is sequential, so this keeps MultiRSU(1) bit-identical to SingleRSU
         batches = _draw_batches(rng, scenario, ids, velocities)
         assign = np.arange(len(ids)) % self.n_rsus
-        groups, blur_groups, losses, sizes, uploads = [], [], [], [], []
+        cohorts, sizes, uploads = [], [], []
         for rsu in range(self.n_rsus):
             sel = np.where(assign == rsu)[0]
             if sel.size == 0:
                 continue
-            trees, ls, ups = client.run_cohort(
+            cohort, ups = client.run_cohort(
                 cfg, state.global_tree, state.client_state, batches[sel],
                 [cks[i] for i in sel], lr, parallel)
-            groups.append(trees)
-            blur_groups.append(blur[sel])
-            losses.extend(ls)
+            cohorts.append(cohort.with_stats(velocities=velocities[sel],
+                                             blur=blur[sel]))
             sizes.append(int(sel.size))
             if ups:
                 uploads.extend(ups)
         if self.mesh_aggregate:
-            new_tree = self._mesh_aggregate(groups, blur_groups)
+            new_tree = self._mesh_aggregate(cohorts)
         else:
-            new_tree = aggregate_hierarchical(groups, blur_groups,
-                                              self.count_scaled)
+            new_tree = aggregate_hierarchical(cohorts,
+                                              count_scaled=self.count_scaled)
         new_cs = client.finalize(cfg, state.client_state, new_tree,
                                  uploads or None)
+        # losses in RSU order (matching the old list-extend order), one fetch
+        losses, vels = _record_fetch(
+            jnp.concatenate([c.valid_losses for c in cohorts]), velocities)
         rec = {"round": state.round, "loss": float(np.mean(losses)),
-               "velocities": np.asarray(velocities).tolist(),
+               "velocities": vels,
                "lr": float(lr), "topology": self.name, "rsu_sizes": sizes}
         return state.replace(global_tree=new_tree, key=key,
                              host_rng=pack_host_rng(rng),
                              round=state.round + 1,
                              client_state=new_cs), rec
 
-    def _mesh_aggregate(self, groups: Sequence, blur_groups: Sequence):
+    def _mesh_aggregate(self, cohorts: Sequence[CohortBatch]):
         """Region merge as the two-stage collective over a (pod, data) mesh.
 
         Requires equal cohort sizes and n_rsus * cohort_size devices — the
         mesh *is* the topology here (one device slice per vehicle).
         """
-        sizes = {len(g) for g in groups}
+        sizes = {c.n for c in cohorts}
         if len(sizes) != 1:
             raise ValueError("mesh_aggregate needs equal per-RSU cohorts; "
-                             f"got sizes {sorted(len(g) for g in groups)}")
+                             f"got sizes {sorted(c.n for c in cohorts)}")
         m = sizes.pop()
-        need = len(groups) * m
+        need = len(cohorts) * m
         if jax.device_count() < need:
             raise ValueError(
                 f"mesh_aggregate needs {need} devices "
-                f"({len(groups)} RSUs x {m} vehicles); "
+                f"({len(cohorts)} RSUs x {m} vehicles); "
                 f"have {jax.device_count()}")
-        mesh = jax.make_mesh((len(groups), m), ("pod", "data"))
-        flat = [t for g in groups for t in g]                  # rsu-major
-        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *flat)
-        blur = jnp.concatenate([jnp.asarray(b, jnp.float32).reshape(-1)
-                                for b in blur_groups])
+        mesh = jax.make_mesh((len(cohorts), m), ("pod", "data"))
+        # rsu-major stacked cohort: concatenate the already-stacked valid
+        # leaves — the old list path re-stacked N separate trees here
+        stacked = jax.tree.map(lambda *ls: jnp.concatenate(ls),
+                               *[c.valid_trees for c in cohorts])
+        blur = jnp.concatenate([c.valid_blur.astype(jnp.float32)
+                                for c in cohorts])
 
         def per_cohort(tree, L):
             return two_stage_weighted_psum(
@@ -290,10 +317,17 @@ class HandoverMultiRSU(Topology):
     with blur-weighted, upload-count-scaled level-2 weights (accumulated
     since the last sync) and redistributes the merged model.
 
-    Clients always run on the sequential (non-vmapped) path here — per-RSU
-    cohort sizes change with vehicle positions every round, and the vmapped
-    step would recompile per distinct size; `run_round`'s `parallel` flag
-    is accepted but ignored.
+    Per-RSU cohort sizes change with vehicle positions every round, and
+    the vmapped cohort step specializes on its size — naively that is a
+    fresh XLA compile per new size, which is why this topology used to be
+    stuck on the slow sequential client path. Instead each download group
+    is padded to a bucketed size (`cohort.bucket_size`: the next power of
+    two), so `parallel=True` (the default) runs every group vmapped with
+    at most ceil(log2(vehicles_per_round)) + 1 distinct compiles; the
+    padding rows replicate the last valid client, consume no RNG, and are
+    masked out of every upload aggregation, making the bucketed path
+    bit-exact with the sequential reference (`parallel=False`,
+    tests/test_topology.py).
 
     Per-round vehicle state (positions, per-RSU models, sync statistics)
     lives in `FLState.topo`:
@@ -308,7 +342,8 @@ class HandoverMultiRSU(Topology):
 
     def __init__(self, n_rsus: int = 2, rsu_range: float = 1000.0,
                  round_duration: float = 20.0, stale_discount: float = 0.5,
-                 sync_every: int = 5, count_scaled: bool = True):
+                 sync_every: int = 5, count_scaled: bool = True,
+                 bucketed: bool = True):
         if n_rsus < 1:
             raise ValueError("n_rsus must be >= 1")
         if not 0.0 <= stale_discount <= 1.0:
@@ -322,6 +357,11 @@ class HandoverMultiRSU(Topology):
         self.stale_discount = stale_discount
         self.sync_every = sync_every
         self.count_scaled = count_scaled
+        # bucketed=False runs the vmapped step at each group's EXACT size
+        # — a fresh XLA compile for every cohort size vehicle motion
+        # produces. Exists so benchmarks/round_engine.py can price the
+        # recompile cost bucketing removes; keep the default on.
+        self.bucketed = bucketed
 
     def validate(self, cfg: FLConfig) -> None:
         _require_flsimco(cfg, "HandoverMultiRSU")
@@ -365,30 +405,38 @@ class HandoverMultiRSU(Topology):
         client = CLIENT_UPDATES[cfg.client]
 
         # Step 2: download from the RSU covering the round-start position.
-        # Always the sequential client path: per-RSU cohort sizes vary with
-        # vehicle positions round to round, and the vmapped step specializes
-        # on cohort size — one cached jit beats a fresh XLA compile per new
-        # size (benchmarks/multi_rsu.py measures the same way).
+        # parallel=True (default) runs each download group vmapped, padded
+        # to its power-of-two bucket so the set of compiled cohort sizes
+        # is bounded; parallel=False is the sequential reference path.
+        # Either way the group results stay STACKED in CohortBatches.
         down = self.rsu_index(positions[ids])
-        client_trees: list = [None] * n
-        losses: list = [0.0] * n
+        group_sel, group_cohorts = [], []
         for rsu in range(self.n_rsus):
             sel = np.where(down == rsu)[0]
             if sel.size == 0:
                 continue
             batches = _draw_batches(rng, scenario, ids[sel], velocities[sel])
-            trees, ls, _ = client.run_cohort(
+            cohort, _ = client.run_cohort(
                 cfg, rsu_models[rsu], state.client_state, batches,
-                [cks[i] for i in sel], lr, parallel=False)
-            for j, i in enumerate(sel):
-                client_trees[i] = trees[j]
-                losses[i] = ls[j]
+                [cks[i] for i in sel], lr, parallel=parallel,
+                pad_to=bucket_size(int(sel.size))
+                if (parallel and self.bucketed) else None)
+            group_sel.append(sel)
+            group_cohorts.append(cohort)
+        # one stacked cohort of all n valid clients (padding dropped),
+        # rows in download-group order; row_of maps cohort index -> row
+        full = CohortBatch.concat(group_cohorts)
+        order = np.concatenate(group_sel)
+        row_of = np.empty(n, np.int64)
+        row_of[order] = np.arange(n)
 
         # motion during the round: everyone moves, positions wrap
         positions = np.asarray(mob.advance_positions(
             positions, fleet_v, self.round_duration, self.road_length))
 
-        # Step 3-4: upload to the RSU now covering the vehicle
+        # Step 3-4: upload to the RSU now covering the vehicle. Upload
+        # groups are device-side gathers out of the stacked cohort — the
+        # old path unstacked into n host trees and re-stacked per RSU.
         up = self.rsu_index(positions[ids])
         stale = up != down
         blur = np.asarray(mob.blur_level(velocities))
@@ -407,8 +455,8 @@ class HandoverMultiRSU(Topology):
                 # none), rather than handing the discarded uploads full
                 # uniform weight
                 continue
-            rsu_models[rsu] = agg._weighted_tree_sum(
-                [client_trees[i] for i in sel], w / s)
+            sub = full.take(row_of[sel])
+            rsu_models[rsu] = agg.cohort_weighted_sum(sub, w / s)
             blur_sum[rsu] += float(blur[sel].sum())
             upload_count[rsu] += sel.size
 
@@ -422,8 +470,10 @@ class HandoverMultiRSU(Topology):
         # between syncs global_tree keeps the last merged model; RSU models
         # stay divergent until sync (region_view() merges on demand without
         # paying an n_rsus-model sum every round)
+        losses_g, vels = _record_fetch(full.losses, velocities)
+        losses = losses_g[row_of]                 # back to cohort order
         rec = {"round": state.round, "loss": float(np.mean(losses)),
-               "velocities": np.asarray(velocities).tolist(),
+               "velocities": vels,
                "lr": float(lr), "topology": self.name,
                "rsu_sizes": upload_sizes,
                "n_handovers": int(stale.sum()), "synced": synced}

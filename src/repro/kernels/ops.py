@@ -2,8 +2,12 @@
 
 * ``dt_loss(q, k, ...)`` — differentiable (custom_vjp: Pallas forward, the
   analytic jnp backward recomputes the similarity tile-free, flash-style).
-* ``wagg_tree(trees, w)`` — blur-weighted aggregation of a list of client
-  pytrees through the fused kernel (ravel -> kernel -> unravel).
+* ``wagg_stacked(stacked_tree, w, mask)`` — blur-weighted aggregation of
+  a stacked cohort pytree (leading client axis) through the fused kernel
+  (ravel rows -> kernel -> unravel); ``mask`` zeroes padding rows of a
+  bucketed `CohortBatch` inside the kernel.
+* ``wagg_tree(trees, w)`` — same for a legacy list of client pytrees
+  (stack once, then the fused pass).
 * ``rwkv6(r, k, v, logw, u)`` — chunked recurrence (forward).
 
 On this CPU container kernels execute in interpret mode; on TPU set
@@ -93,13 +97,14 @@ dt_loss.defvjp(_dt_fwd_vjp, _dt_bwd)
 # weighted aggregation
 # --------------------------------------------------------------------------
 
-def wagg_flat(stacked, w, interpret: bool | None = None):
+def wagg_flat(stacked, w, interpret: bool | None = None, mask=None):
     """stacked (N, P) x w (N,) -> (P,) f32 via the fused kernel (pads P).
 
-    On TPU the kernel tiles P into BP-sized VMEM blocks. In interpret mode
-    the per-grid-step overhead dominates (a ResNet-18 tree is ~5500 BP
-    blocks), so the whole padded axis becomes one block — same kernel,
-    grid of 1.
+    `mask` (N,) optionally zeroes rows inside the kernel (padding rows of
+    a bucketed cohort). On TPU the kernel tiles P into BP-sized VMEM
+    blocks. In interpret mode the per-grid-step overhead dominates (a
+    ResNet-18 tree is ~5500 BP blocks), so the whole padded axis becomes
+    one block — same kernel, grid of 1.
     """
     interpret = _default_interpret() if interpret is None else interpret
     N, P = stacked.shape
@@ -108,12 +113,42 @@ def wagg_flat(stacked, w, interpret: bool | None = None):
         stacked = jnp.concatenate(
             [stacked, jnp.zeros((N, pad), stacked.dtype)], axis=1)
     block = stacked.shape[1] if interpret else BP
-    out = wagg_pallas(stacked, w, interpret=interpret, block=block)
+    out = wagg_pallas(stacked, w, mask, interpret=interpret, block=block)
     return out[:P]
 
 
+def _unravel_like(out, tree):
+    """(P,) f32 -> the structure/dtypes of `tree` (inverse of raveling)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    new_leaves, off = [], 0
+    for l in leaves:
+        n = l.size
+        new_leaves.append(out[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def wagg_stacked(stacked_tree, w, mask=None, interpret: bool | None = None):
+    """Weighted sum over the leading cohort axis of a STACKED pytree.
+
+    Every leaf of `stacked_tree` is (N, ...); the leaves are raveled to
+    one (N, P) matrix (a per-row view of the same memory layout
+    `wagg_tree` builds by stacking N flat trees) and reduced in one fused
+    pass — the `CohortBatch` path hands the kernel its stacked tensor
+    without ever unstacking into per-client trees.
+    """
+    leaves = jax.tree.leaves(stacked_tree)
+    N = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(N, -1).astype(jnp.float32) for l in leaves], axis=1)
+    w = jnp.asarray(w, jnp.float32)
+    out = wagg_flat(flat, w, interpret, mask=mask)
+    return _unravel_like(out, jax.tree.map(lambda x: x[0], stacked_tree))
+
+
 def wagg_tree(trees: Sequence, w, interpret: bool | None = None):
-    """Weighted sum of client pytrees via one fused pass over flat params."""
+    """Weighted sum of a LIST of client pytrees (legacy boundary): stacks
+    once, then runs the same fused pass as `wagg_stacked`."""
     flats = []
     for t in trees:
         leaves = jax.tree.leaves(t)
@@ -122,14 +157,7 @@ def wagg_tree(trees: Sequence, w, interpret: bool | None = None):
     stacked = jnp.stack(flats)
     w = jnp.asarray(w, jnp.float32)
     out = wagg_flat(stacked, w, interpret)
-    # unravel into the first tree's structure
-    leaves, treedef = jax.tree.flatten(trees[0])
-    new_leaves, off = [], 0
-    for l in leaves:
-        n = l.size
-        new_leaves.append(out[off:off + n].reshape(l.shape).astype(l.dtype))
-        off += n
-    return jax.tree.unflatten(treedef, new_leaves)
+    return _unravel_like(out, trees[0])
 
 
 # --------------------------------------------------------------------------

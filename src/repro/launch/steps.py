@@ -195,7 +195,7 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
     weights (see module docstring); `aggregation="fedavg"` degenerates to
     uniform weights, "discard" zeroes examples past the blur threshold.
     """
-    from repro.core.mobility import KMH_100
+    from repro.core.mobility import BLUR_KMH_100
     nm = n_micro or pick_n_micro(cfg, shape, mesh)
     constrain = sh.make_activation_rules(mesh, shape.global_batch)
 
@@ -203,7 +203,7 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         if aggregation == "flsimco":
             return _flsimco_example_weights(blur)
         if aggregation == "discard":
-            keep = (blur <= KMH_100 * 0.58).astype(jnp.float32)
+            keep = (blur <= BLUR_KMH_100).astype(jnp.float32)
             return keep / jnp.maximum(keep.sum(), 1.0)
         return jnp.full_like(blur, 1.0 / blur.shape[0])
 

@@ -57,19 +57,54 @@ def test_fedavg_equals_flsimco_with_equal_blur():
 
 
 def test_discard_drops_fast_vehicles():
+    from repro.core.mobility import BLUR_KMH_100, MobilityModel
     key = jax.random.PRNGKey(2)
     trees = _trees(key, 3)
-    v = jnp.array([10.0, 50.0, 20.0])        # threshold 27.78: drop idx 1
-    out = aggregate_discard(trees, v, threshold=27.78)
+    v = jnp.array([10.0, 50.0, 20.0])        # m/s; only idx 1 > 100 km/h
+    blur = MobilityModel().blur_level(v)
+    out = aggregate_discard(trees, blur, threshold=BLUR_KMH_100)
     expected = aggregate_fedavg([trees[0], trees[2]])
     for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(expected)):
         np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
 
 
+def test_disp_discard_thresholds_blur_not_velocity():
+    """Regression: the registry documents "drop clients above
+    cfg.blur_threshold" where the threshold is a BLUR level (Eq. 2), but
+    the old dispatch thresholded raw velocities. Pin the kept-set under
+    the blur semantics: v = [20, 30, 40] m/s with camera constant 0.58
+    gives L = [11.6, 17.4, 23.2]; the default threshold (blur at
+    100 km/h, ~16.11) keeps exactly client 0 — the velocity reading
+    (v <= 27.78) would wrongly keep {0, 1}."""
+    from repro.core.aggregation import AGGREGATORS, discard_weights
+    from repro.core.cohort import CohortBatch
+    from repro.core.mobility import BLUR_KMH_100, MobilityModel
+    from repro.core.state import FLConfig
+
+    cfg = FLConfig(aggregator="discard")
+    assert np.isclose(cfg.blur_threshold, BLUR_KMH_100)
+    v = jnp.array([20.0, 30.0, 40.0])
+    blur = MobilityModel().blur_level(v)
+    w = np.asarray(discard_weights(blur, cfg.blur_threshold))
+    np.testing.assert_allclose(w, [1.0, 0.0, 0.0])   # the pinned kept-set
+
+    key = jax.random.PRNGKey(5)
+    trees = _trees(key, 3)
+    cohort = CohortBatch.from_list(trees, jnp.zeros(3),
+                                   velocities=v, blur=blur)
+    out = AGGREGATORS["discard"](cohort, cfg)
+    expected = trees[0]                               # only client 0 kept
+    for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=1e-6)
+
+
 def test_discard_all_fast_falls_back_to_fedavg():
+    from repro.core.mobility import BLUR_KMH_100, MobilityModel
     key = jax.random.PRNGKey(3)
     trees = _trees(key, 3)
-    out = aggregate_discard(trees, jnp.array([90.0, 80.0, 70.0]), 27.78)
+    blur = MobilityModel().blur_level(jnp.array([90.0, 80.0, 70.0]))
+    out = aggregate_discard(trees, blur, BLUR_KMH_100)
     expected = aggregate_fedavg(trees)
     for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(expected)):
         np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)

@@ -1,0 +1,145 @@
+"""CohortBatch: padded/masked aggregation bit-exactness + invariants.
+
+The load-bearing guarantee of the stacked-cohort round engine: a cohort
+padded to a bucketed size (garbage-but-finite padding rows, zero masked
+weights) aggregates BIT-EXACTLY like the unpadded cohort, for every
+entry in ``AGGREGATORS`` and on both weighted-sum backends (jnp tree-map
+and the Pallas wagg kernel in interpret mode). Weights are computed on
+the static valid slice and zero-padded, so padding adds exact +0.0 terms
+to the reduction — see core/cohort.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.aggregation import AGGREGATORS
+from repro.core.cohort import CohortBatch, bucket_size
+from repro.core.state import FLConfig
+
+
+def _stacked_trees(key, m, shapes=((4, 3), (7,))):
+    return {"a": jax.random.normal(key, (m,) + shapes[0]),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (m,) + shapes[1])}}
+
+
+def _cohort(key, n, m, blur):
+    """n valid clients padded to m rows; padding rows are random garbage
+    (finite) to prove the mask really excludes them."""
+    trees = _stacked_trees(key, m)
+    losses = jax.random.uniform(jax.random.fold_in(key, 2), (m,))
+    blur_pad = jnp.concatenate(
+        [jnp.asarray(blur, jnp.float32),
+         jnp.full((m - n,), 99.0, jnp.float32)])  # garbage padding blur
+    return CohortBatch.from_stacked(trees, losses, n=n, blur=blur_pad)
+
+
+# blur values chosen to straddle the default FLConfig.blur_threshold
+# (~16.11) so "discard" keeps a strict subset
+BLUR = jnp.array([11.6, 17.4, 12.8])
+
+
+@pytest.mark.parametrize("backend", ["tree", "interpret"])
+@pytest.mark.parametrize("name", sorted(AGGREGATORS))
+def test_padded_aggregation_bit_exact_vs_unpadded(name, backend):
+    key = jax.random.PRNGKey(0)
+    cfg = FLConfig(aggregator=name)
+    padded = _cohort(key, n=3, m=8, blur=BLUR)
+    unpadded = CohortBatch.from_stacked(padded.valid_trees,
+                                        padded.valid_losses, n=3, blur=BLUR)
+    with agg.wagg_backend(backend):
+        out_p = AGGREGATORS[name](padded, cfg)
+        out_u = AGGREGATORS[name](unpadded, cfg)
+    for lp, lu in zip(jax.tree.leaves(out_p), jax.tree.leaves(out_u)):
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(lu))
+
+
+def test_masked_kernel_matches_prezeroed_weights():
+    """wagg_stacked(mask=...) == wagg_stacked with weights zeroed ahead of
+    time — the in-kernel mask multiply is exact."""
+    from repro.kernels.ops import wagg_stacked
+    key = jax.random.PRNGKey(1)
+    stacked = _stacked_trees(key, 5)
+    w = jnp.array([0.3, 0.2, 0.5, 0.7, 0.9])
+    mask = jnp.array([1.0, 1.0, 1.0, 0.0, 0.0])
+    out_m = wagg_stacked(stacked, w, mask=mask, interpret=True)
+    out_z = wagg_stacked(stacked, w * mask, interpret=True)
+    for lm, lz in zip(jax.tree.leaves(out_m), jax.tree.leaves(out_z)):
+        np.testing.assert_array_equal(np.asarray(lm), np.asarray(lz))
+
+
+def test_bucket_size_policy():
+    assert [bucket_size(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+    with pytest.raises(ValueError):
+        bucket_size(0)
+    # the bound the handover topology relies on: cohorts of any size
+    # 1..V land in at most ceil(log2(V)) + 1 distinct buckets
+    V = 8
+    assert len({bucket_size(s) for s in range(1, V + 1)}) <= \
+        int(np.ceil(np.log2(V))) + 1
+
+
+def test_from_list_unstack_roundtrip():
+    key = jax.random.PRNGKey(2)
+    trees = [jax.tree.map(lambda x: x[i], _stacked_trees(key, 3))
+             for i in range(3)]
+    c = CohortBatch.from_list(trees, [jnp.asarray(0.1), jnp.asarray(0.2),
+                                      jnp.asarray(0.3)])
+    assert c.n == c.size == 3
+    back = c.unstack()
+    for t0, t1 in zip(trees, back):
+        for l0, l1 in zip(jax.tree.leaves(t0), jax.tree.leaves(t1)):
+            np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    np.testing.assert_allclose(np.asarray(c.valid_losses), [0.1, 0.2, 0.3])
+
+
+def test_concat_drops_padding_and_take_gathers():
+    key = jax.random.PRNGKey(3)
+    c1 = _cohort(key, n=2, m=4, blur=jnp.array([1.0, 2.0]))
+    c2 = _cohort(jax.random.fold_in(key, 5), n=3, m=4,
+                 blur=jnp.array([3.0, 4.0, 5.0]))
+    full = CohortBatch.concat([c1, c2])
+    assert full.n == full.size == 5
+    np.testing.assert_allclose(np.asarray(full.blur), [1, 2, 3, 4, 5])
+    # row i of the concat is the i-th valid row of (c1 then c2)
+    np.testing.assert_array_equal(np.asarray(full.trees["a"][2]),
+                                  np.asarray(c2.trees["a"][0]))
+    sub = full.take(np.array([4, 0]))
+    assert sub.n == 2
+    np.testing.assert_array_equal(np.asarray(sub.trees["a"][0]),
+                                  np.asarray(c2.trees["a"][2]))
+    np.testing.assert_allclose(np.asarray(sub.blur), [5.0, 1.0])
+
+
+def test_padded_weights_and_stat_validation():
+    key = jax.random.PRNGKey(4)
+    c = _cohort(key, n=3, m=8, blur=BLUR)
+    w = c.padded_weights(jnp.array([0.5, 0.25, 0.25]))
+    assert w.shape == (8,)
+    np.testing.assert_allclose(np.asarray(w[3:]), 0.0)
+    with pytest.raises(ValueError, match="weights"):
+        c.padded_weights(jnp.ones(5))
+    with pytest.raises(ValueError, match="stat length"):
+        c.with_stats(velocities=jnp.ones(5))
+    # incremental attachment: adding velocities must not wipe blur
+    c2 = c.with_stats(velocities=jnp.ones(3))
+    np.testing.assert_array_equal(np.asarray(c2.blur), np.asarray(c.blur))
+    assert c2.velocities.shape == (8,)
+    with pytest.raises(ValueError, match="valid count"):
+        CohortBatch.from_stacked(c.trees, c.losses, n=9)
+    plain = CohortBatch.from_stacked(c.trees, c.losses, n=3)
+    with pytest.raises(ValueError, match="blur"):
+        _ = plain.valid_blur
+
+
+def test_cohort_is_a_pytree():
+    """device_get fetches the whole record payload in one transfer."""
+    key = jax.random.PRNGKey(5)
+    c = _cohort(key, n=3, m=4, blur=BLUR)
+    fetched = jax.device_get(c)
+    assert isinstance(fetched, CohortBatch)
+    assert fetched.n == 3
+    assert isinstance(fetched.losses, np.ndarray)

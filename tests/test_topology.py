@@ -46,9 +46,9 @@ def test_multi_rsu_one_matches_single_rsu(tiny_world, monkeypatch):
     calls = {"n": 0}
     real = kops.wagg_flat
 
-    def spy(stacked, w, interpret=None):
+    def spy(stacked, w, interpret=None, mask=None):
         calls["n"] += 1
-        return real(stacked, w, interpret)
+        return real(stacked, w, interpret, mask=mask)
 
     monkeypatch.setattr(kops, "wagg_flat", spy)
     with agg.wagg_backend("interpret"):
@@ -105,6 +105,36 @@ def test_handover_migrates_and_syncs(tiny_world):
     # positions stayed on the ring road
     positions = tr.state.topo["positions"]
     assert np.all(positions >= 0) and np.all(positions < topo.road_length)
+
+
+def test_handover_bucketed_vmapped_matches_sequential(tiny_world):
+    """The default handover path (vmapped cohorts padded to power-of-two
+    buckets, masked-weight aggregation) is BIT-exact with the sequential
+    per-client reference — every FLState leaf and every record field —
+    and stays within the bucketing compile bound."""
+    from repro.core.clients import (cohort_step_cache_size,
+                                    reset_cohort_step_caches)
+    from repro.core.scenario import run_round
+
+    data, tree = tiny_world
+    cfg = dataclasses.replace(BASE_CFG, vehicles_per_round=4, rounds=4)
+    topo = HandoverMultiRSU(n_rsus=2, rsu_range=200.0, round_duration=50.0,
+                            stale_discount=0.5, sync_every=2)
+    tr_p = FederatedTrainer(cfg, tree, data, topology=topo)
+    tr_s = FederatedTrainer(cfg, tree, data, topology=topo)
+    reset_cohort_step_caches()
+    sp, ss = tr_p.state, tr_s.state
+    with agg.wagg_backend("interpret"):
+        for _ in range(4):
+            sp, rp = run_round(sp, tr_p.scenario, parallel=True)
+            ss, rs = run_round(ss, tr_s.scenario, parallel=False)
+            assert rp == rs
+            for lp, ls in zip(jax.tree.leaves(sp.to_tree()),
+                              jax.tree.leaves(ss.to_tree())):
+                np.testing.assert_array_equal(np.asarray(lp), np.asarray(ls))
+    # download-group sizes are 1..4, so at most buckets {1, 2, 4} compile
+    assert cohort_step_cache_size(cfg) <= \
+        int(np.ceil(np.log2(cfg.vehicles_per_round))) + 1
 
 
 def test_mesh_two_stage_collective_through_trainer(tiny_world):
