@@ -18,19 +18,34 @@ variants across the three topologies:
           All (<= ceil(log2(V)) + 1) bucket sizes are pre-warmed, so the
           timed window is steady state — bounded compiles are the point.
 
+On top of the per-round paths, the CAMPAIGN engine (core/engine.py) is
+timed end to end for `--campaign-topos` (default single,handover):
+
+  jit_round  run_campaign(mode="jit") — one fused round program, python
+             loop, once-per-chunk history fetch (the CPU fast path).
+  scan       run_campaign(mode="scan") — lax.scan chunks (the
+             accelerator path; on CPU the scan's while loop pessimizes
+             the convolutions, so this entry is EXPECTED to lose here).
+
 Compile counts come from the vmapped step's jit cache
-(`clients.cohort_step_cache_size`). Note for CPU runs: XLA-CPU gains
-little from batching an already compute-bound cohort (the cores
-saturate either way), so cohort-vs-list hovers near 1x for single/multi
-and the handover bucket padding (up to ~1.5x extra client-slots) is
-paid in full — while XLA-CPU recompiles of the small step are cheap
-enough that the naive path partially amortizes them. The >= 2x target
-for the cohort path is an accelerator-backend claim, where cohort
-batching amortizes (and each XLA:TPU compile costs minutes, making the
-naive path unusable); what this bench pins on every backend is the
-compile BOUND — the cohort path never exceeds
-ceil(log2(vehicles_per_round)) + 1 cohort-step compiles per topology,
-the naive path grows without bound.
+(`clients.cohort_step_cache_size`) and, for the campaign entries, from
+`engine.compile_counts`. Note for CPU runs: XLA-CPU gains little from
+batching an already compute-bound cohort (the cores saturate either
+way), so cohort-vs-list hovers near 1x for single/multi and the
+handover bucket padding (up to ~1.5x extra client-slots) is paid in
+full — while XLA-CPU recompiles of the small step are cheap enough
+that the naive path partially amortizes them. The same asymmetry caps
+the campaign engine on CPU: jit_round lands ~1.2-1.5x over the eager
+cohort path (the fused body removes per-round dispatch + host syncs,
+but the vmapped conv gradients dominate), and the >= 2x target — like
+the cohort-path target below — is an accelerator-backend claim, where
+fusing K rounds into one dispatch amortizes launch overhead that CPU
+never pays. What this bench pins on EVERY backend is the compile
+BOUND: the cohort path never exceeds ceil(log2(vehicles_per_round))+1
+cohort-step compiles per topology, the campaign engine never exceeds
+ONE jit_round program and one scan program per distinct chunk length
+(<= 2 for a fixed cadence) — handover regrouping is data, not shape —
+while the naive path grows without bound.
 
   PYTHONPATH=src python benchmarks/round_engine.py [--rounds 3]
 
@@ -115,6 +130,20 @@ def time_path(scenario, rounds: int, parallel: bool, warm: bool):
     return dt * 1e6, 1.0 / dt, cohort_step_cache_size(scenario.cfg)
 
 
+def time_campaign(scenario, rounds: int, mode: str):
+    """(us_per_round, rounds_per_sec) for the compiled campaign engine,
+    steady state: the first call compiles + warms, the timed call replays
+    the cached program(s)."""
+    from repro.core.engine import run_campaign
+
+    run_campaign(scenario, rounds=1, mode=mode)           # compile + warm
+    t0 = time.perf_counter()
+    state, _ = run_campaign(scenario, rounds=rounds, mode=mode)
+    jax.block_until_ready(state.global_tree)
+    dt = (time.perf_counter() - t0) / rounds
+    return dt * 1e6, 1.0 / dt
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=3)
@@ -125,6 +154,10 @@ def main():
     ap.add_argument("--skip-naive", action="store_true",
                     help="skip the recompiling naive handover path "
                          "(it pays multi-minute XLA compiles by design)")
+    ap.add_argument("--campaign-topos", default="single,handover",
+                    help="comma list of topologies to run the campaign "
+                         "engine on (empty string skips it; default "
+                         "keeps CI compile cost bounded)")
     args = ap.parse_args()
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
@@ -150,10 +183,16 @@ def main():
         "handover": HandoverMultiRSU(**handover_kw),
     }
 
+    campaign_topos = {t for t in args.campaign_topos.split(",") if t}
+    unknown = campaign_topos - set(topologies)
+    if unknown:
+        ap.error(f"--campaign-topos: unknown topologies {sorted(unknown)}")
+
     results = {"config": {"vehicles_per_round": V, "n_rsus": args.rsus,
                           "batch_size": args.batch, "rounds": args.rounds,
                           "backend": jax.default_backend(),
-                          "compile_bound": compile_bound}}
+                          "compile_bound": compile_bound,
+                          "campaign_topos": sorted(campaign_topos)}}
     for name, topo in topologies.items():
         sc = Scenario(topology=topo, **base)
         paths = [("list", sc, False, False), ("cohort", sc, True, True)]
@@ -178,6 +217,28 @@ def main():
                                          / entry["cohort"]["us_per_round"])
         entry["within_compile_bound"] = \
             entry["cohort"]["cohort_step_compiles"] <= compile_bound
+        if name in campaign_topos:
+            from repro.core.engine import compile_counts, reset_engine_caches
+            reset_engine_caches()
+            for mode in ("jit", "scan"):
+                us, rps = time_campaign(sc, args.rounds, mode)
+                key = "jit_round" if mode == "jit" else "scan"
+                entry[key] = {"us_per_round": us, "rounds_per_sec": rps}
+                emit(f"round_engine/{name}/{key}", us, f"V={V};R={args.rsus}")
+                sys.stdout.flush()
+            counts = compile_counts(sc)
+            # the campaign contract: ONE fused round program, one scan
+            # program per distinct chunk length (2 here: the warmup
+            # chunk of 1 + the timed chunk of --rounds)
+            assert counts["jit_round"] <= 1, counts
+            assert counts["scan"] <= 2, counts
+            entry["engine_compiles"] = counts
+            entry["engine_within_compile_bound"] = True
+            entry["speedup_jit_vs_cohort"] = (
+                entry["cohort"]["us_per_round"]
+                / entry["jit_round"]["us_per_round"])
+            emit(f"round_engine/{name}/speedup_jit_vs_cohort",
+                 entry["speedup_jit_vs_cohort"], "")
         results[name] = entry
         emit(f"round_engine/{name}/speedup_vs_list",
              entry["speedup_vs_list"], "")
@@ -193,6 +254,14 @@ def main():
           f"compiles within bound "
           f"(<= {compile_bound}): "
           f"{all(results[t]['within_compile_bound'] for t in topologies)}")
+    for t in sorted(campaign_topos):
+        e = results[t]
+        print(f"# {t} campaign engine: jit_round "
+              f"{e['speedup_jit_vs_cohort']:.2f}x vs cohort path "
+              f"(>= 2x is an accelerator-backend claim; CPU saturates on "
+              f"the conv gradients), compiles "
+              f"jit={e['engine_compiles']['jit_round']} "
+              f"scan={e['engine_compiles']['scan']} (bounds 1/2)")
 
 
 if __name__ == "__main__":

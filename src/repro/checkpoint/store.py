@@ -147,8 +147,14 @@ def latest(ckpt_dir: str):
 
 def _scenario_fingerprint(scenario) -> dict:
     import dataclasses
+    # topology.signature() carries the static topology PARAMETERS, not
+    # just the name: a handover checkpoint taken under n_rsus=2 must not
+    # resume under n_rsus=3 (the campaign engine would happily replay a
+    # mixed schedule otherwise)
+    sig = scenario.topology.signature()
     return {"cfg": dataclasses.asdict(scenario.cfg),
-            "topology": scenario.topology.name}
+            "topology": scenario.topology.name,
+            "topology_params": {k: v for k, v in sig.items() if k != "name"}}
 
 
 def save_state(path: str, state, scenario=None) -> str:
@@ -190,6 +196,8 @@ def restore_state(path: str, scenario=None):
                         if stored["cfg"].get(k) != want["cfg"][k]]
                 if stored["topology"] != want["topology"]:
                     diff.append("topology")
+                if stored.get("topology_params") != want["topology_params"]:
+                    diff.append("topology_params")
                 raise ValueError(
                     f"checkpoint {path} was written by a different "
                     f"experiment (mismatched: {diff}); refusing to resume. "

@@ -158,6 +158,24 @@ def _jitted_local_steps(cfg: FLConfig):
 
 
 @functools.lru_cache(maxsize=16)
+def _cached_raw_step(local_iters, momentum, weight_decay,
+                     tau_alpha, tau_beta):
+    return make_local_train_step(FLConfig(
+        local_iters=local_iters, momentum=momentum,
+        weight_decay=weight_decay, tau_alpha=tau_alpha, tau_beta=tau_beta))
+
+
+def raw_local_step(cfg: FLConfig):
+    """The UNJITTED per-client train step for cfg — the campaign engine
+    (core/engine.py) vmaps and fuses this inside its own jitted round
+    body, so wrapping it in jit here would only nest dispatch layers.
+    Cached per hyperparameter tuple so engine callables built for the
+    same cfg share one function object."""
+    return _cached_raw_step(cfg.local_iters, cfg.momentum,
+                            cfg.weight_decay, cfg.tau_alpha, cfg.tau_beta)
+
+
+@functools.lru_cache(maxsize=16)
 def _cached_moco_step(local_iters, momentum, weight_decay, moco_momentum):
     return jax.jit(make_moco_local_train_step(FLConfig(
         local_iters=local_iters, momentum=momentum,
@@ -182,6 +200,7 @@ def reset_cohort_step_caches() -> None:
     """Drop every cached/compiled client step (benchmark isolation)."""
     _cached_local_steps.cache_clear()
     _cached_moco_step.cache_clear()
+    _cached_raw_step.cache_clear()
 
 
 # --------------------------------------------------------------------------

@@ -34,7 +34,8 @@ import numpy as np
 
 from repro.core.clients import CLIENT_UPDATES
 from repro.core.mobility import MobilityModel
-from repro.core.state import FLConfig, FLState, pack_host_rng
+from repro.core.state import (FLConfig, FLState, pack_host_rng,
+                              resolve_fedco_alias)
 from repro.core.topology import TOPOLOGIES, Topology
 from repro.optim.optimizers import cosine_schedule
 
@@ -84,16 +85,10 @@ class Scenario:
             cfg = FLConfig(**cfg_kwargs)
         elif cfg_kwargs:
             cfg = dataclasses.replace(cfg, **cfg_kwargs)
-        if aggregator == "fedco":
-            # resolve the legacy alias BEFORE dataclasses.replace: the base
-            # cfg's client field is already normalized to a concrete name,
-            # which FLConfig could not tell apart from an explicit request
-            if client not in (None, "fedco"):
-                raise ValueError(
-                    "aggregator='fedco' is a legacy alias for "
-                    "client='fedco', aggregator='fedavg' and conflicts "
-                    f"with explicit client={client!r}; pick one spelling")
-            aggregator, client = "fedavg", "fedco"
+        # resolve the legacy "fedco" alias BEFORE dataclasses.replace: the
+        # base cfg's client field is already normalized to a concrete name,
+        # which FLConfig could not tell apart from an explicit request
+        aggregator, client = resolve_fedco_alias(aggregator, client)
         overrides = {}
         if aggregator is not None:
             overrides["aggregator"] = aggregator
@@ -202,7 +197,12 @@ def run(scenario: Scenario, state: Optional[FLState] = None,
         rounds: Optional[int] = None, parallel: bool = True,
         log_every: int = 0):
     """Run `rounds` rounds (default cfg.rounds) from `state` (default the
-    scenario's round-0 state). Returns (final state, list of records)."""
+    scenario's round-0 state). Returns (final state, list of records).
+
+    This is the eager loop: one `run_round` dispatch per round, one
+    history fetch per round. `run_campaign` runs the same campaign
+    through the compiled engine (core/engine.py) with an identical
+    schedule and once-per-chunk history fetches."""
     if state is None:
         state = scenario.init_state()
     history = []
@@ -213,3 +213,14 @@ def run(scenario: Scenario, state: Optional[FLState] = None,
             print(f"[round {rec['round']:4d}] loss={rec['loss']:.4f} "
                   f"lr={rec['lr']:.4f}")
     return state, history
+
+
+def run_campaign(scenario: Scenario, state: Optional[FLState] = None,
+                 rounds: Optional[int] = None, **kwargs):
+    """Compiled form of `run`: pre-draws the whole schedule from the
+    same RNG streams, then executes one jitted round body per round
+    ("jit" mode) or `lax.scan` chunks ("scan" mode) — see
+    core/engine.py for modes, checkpointing and the bit-exactness
+    contract. Signature sugar over `engine.run_campaign`."""
+    from repro.core.engine import run_campaign as _run_campaign
+    return _run_campaign(scenario, state, rounds, **kwargs)

@@ -29,6 +29,26 @@ import numpy as np
 from repro.core.mobility import BLUR_KMH_100
 
 
+def resolve_fedco_alias(aggregator, client):
+    """Normalize the legacy ``aggregator="fedco"`` spelling.
+
+    Historically "fedco" was accepted as an *aggregator* name meaning
+    "FedCo client algorithm aggregated with FedAvg". Both `FLConfig`
+    and `Scenario` accept the old spelling; this is the one place that
+    resolves it into the two registries (DESIGN.md deviation list), so
+    the conflict rule cannot drift between entry points. Returns the
+    (aggregator, client) pair unchanged unless aggregator == "fedco".
+    """
+    if aggregator != "fedco":
+        return aggregator, client
+    if client not in (None, "fedco"):
+        raise ValueError(
+            "aggregator='fedco' is a legacy alias for "
+            "client='fedco', aggregator='fedavg' and conflicts "
+            f"with explicit client={client!r}; pick one spelling")
+    return "fedavg", "fedco"
+
+
 @dataclass(frozen=True)
 class FLConfig:
     n_vehicles: int = 95          # fleet size (Table 1)
@@ -53,18 +73,14 @@ class FLConfig:
 
     def __post_init__(self):
         # legacy spelling: aggregator="fedco" meant "FedCo client algorithm
-        # aggregated with FedAvg" — normalize it into the two registries,
-        # but never silently override an explicitly requested client
-        if self.aggregator == "fedco":
-            if self.client not in (None, "fedco"):
-                raise ValueError(
-                    "aggregator='fedco' is a legacy alias for "
-                    "client='fedco', aggregator='fedavg' and conflicts "
-                    f"with explicit client={self.client!r}; pick one "
-                    "spelling")
-            object.__setattr__(self, "aggregator", "fedavg")
-            object.__setattr__(self, "client", "fedco")
-        elif self.client is None:
+        # aggregated with FedAvg" — `resolve_fedco_alias` normalizes it
+        # into the two registries and rejects a conflicting explicit client
+        aggregator, client = resolve_fedco_alias(self.aggregator, self.client)
+        if aggregator != self.aggregator:
+            object.__setattr__(self, "aggregator", aggregator)
+        if client != self.client:
+            object.__setattr__(self, "client", client)
+        if self.client is None:
             object.__setattr__(self, "client", "dtssl")
         # deferred imports: the registries live in modules that import
         # FLConfig, so resolving them here (call time) breaks the cycle

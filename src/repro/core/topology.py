@@ -67,21 +67,33 @@ from repro.core.state import FLConfig, FLState, pack_host_rng, unpack_host_rng
 # shared round machinery (host RNG draws in a fixed, documented order)
 # --------------------------------------------------------------------------
 
-def _client_batch(rng, scenario, cid: int, velocity):
-    """One client's training batch, drawn from the *host* RNG stream.
+def _batch_indices(rng, data_len: int, cfg) -> np.ndarray:
+    """One client's batch indices, drawn from the *host* RNG stream.
 
     Fixed batch size across clients (vmapped cohorts need equal shapes);
-    small clients sample with replacement.
-    """
-    data = scenario.data[cid]
-    cfg = scenario.cfg
-    idx = rng.choice(len(data), size=cfg.batch_size,
-                     replace=len(data) < cfg.batch_size)
-    images = jnp.asarray(data[idx])
+    small clients sample with replacement. This is the ONE place batch
+    indices come from: the eager round path and the compiled campaign
+    engine (core/engine.py) both draw through here, which is what makes
+    the engine's pre-drawn schedule arrays bitwise-identical to the live
+    draws (tests/test_engine.py)."""
+    return rng.choice(data_len, size=cfg.batch_size,
+                      replace=data_len < cfg.batch_size)
+
+
+def _client_images(scenario, cid: int, idx, velocity):
+    """Materialize one client's batch from pre-drawn indices (consumes
+    no RNG — blur is a pure function of the velocity draw)."""
+    images = jnp.asarray(scenario.data[cid][idx])
     if scenario.blur_images:
         images = apply_motion_blur(images, velocity,
                                    scenario.mobility.camera_const)
     return images
+
+
+def _client_batch(rng, scenario, cid: int, velocity):
+    """Draw + materialize one client's training batch."""
+    idx = _batch_indices(rng, len(scenario.data[cid]), scenario.cfg)
+    return _client_images(scenario, cid, idx, velocity)
 
 
 def _draw_batches(rng, scenario, ids, velocities):
@@ -92,24 +104,53 @@ def _draw_batches(rng, scenario, ids, velocities):
                       for c, v in zip(ids, velocities)])
 
 
+def _cohort_plan(rng, key, rnd: int, scenario):
+    """Training-independent round preamble: cohort ids from the host RNG,
+    velocities + per-client keys from the jax chain, LR from the cosine
+    schedule. Takes the RNG streams EXPLICITLY (not an FLState) so the
+    compiled campaign engine can replay the identical draw sequence K
+    rounds ahead of execution. Returns (ids, velocities, lr, key, cks).
+    """
+    cfg, mob = scenario.cfg, scenario.mobility
+    ids = rng.choice(cfg.n_vehicles, size=cfg.vehicles_per_round,
+                     replace=False)
+    key, kv = jax.random.split(key)
+    velocities = mob.sample(kv, len(ids))
+    lr = scenario.lr_fn(rnd)
+    key, *cks = jax.random.split(key, len(ids) + 1)
+    return ids, velocities, lr, key, cks
+
+
 def _sample_cohort(state, scenario):
     """Round preamble shared by SingleRSU and MultiRSU.
 
     The draw ORDER (host-RNG cohort ids -> jax velocity key -> per-client
     keys) is load-bearing: the MultiRSU(1) == SingleRSU bit-exactness
     guarantee requires both topologies to consume both RNG streams
-    identically, so the sequence lives in exactly one place.
+    identically, so the sequence lives in exactly one place
+    (`_cohort_plan`, also the engine's schedule source).
     Returns (rng, ids, velocities, lr, key, client_keys).
     """
-    cfg, mob = scenario.cfg, scenario.mobility
     rng = unpack_host_rng(state.host_rng)
-    ids = rng.choice(cfg.n_vehicles, size=cfg.vehicles_per_round,
-                     replace=False)
-    key, kv = jax.random.split(state.key)
-    velocities = mob.sample(kv, len(ids))
-    lr = scenario.lr_fn(state.round)
-    key, *cks = jax.random.split(key, len(ids) + 1)
+    ids, velocities, lr, key, cks = _cohort_plan(rng, state.key,
+                                                 state.round, scenario)
     return rng, ids, velocities, lr, key, cks
+
+
+def _region_sync_weights(mob, blur_sum, upload_count,
+                         count_scaled: bool) -> np.ndarray:
+    """Level-2 sync weights (Eq. 11 over per-RSU mean blur since the last
+    sync, optionally scaled by upload counts). Training-independent —
+    shared by the eager round and the engine's schedule precompute."""
+    counts = np.asarray(upload_count, np.float64)
+    mean_blur = np.where(
+        counts > 0, np.asarray(blur_sum, np.float64) / np.maximum(counts, 1.0),
+        float(mob.blur_level(mob.mu)))   # no uploads: prior mean blur
+    W = np.asarray(agg.flsimco_weights(jnp.asarray(mean_blur, jnp.float32)))
+    if count_scaled:
+        W = W * counts
+    s = W.sum()
+    return W / s if s > 1e-12 else np.full_like(W, 1.0 / len(W))
 
 
 def _record_fetch(losses, velocities):
@@ -140,6 +181,14 @@ class Topology:
 
     def validate(self, cfg: FLConfig) -> None:
         pass
+
+    def signature(self) -> dict:
+        """Static topology parameters, JSON-able — part of the checkpoint
+        experiment fingerprint (checkpoint/store.py) and the engine's
+        compiled-callable cache key (core/engine.py). The name alone is
+        not enough: a handover checkpoint taken under n_rsus=2 must not
+        resume under n_rsus=3."""
+        return {"name": self.name}
 
     def init_state(self, cfg: FLConfig, mobility, global_tree, key):
         return {}, key
@@ -210,6 +259,11 @@ class MultiRSU(Topology):
         self.n_rsus = n_rsus
         self.count_scaled = count_scaled
         self.mesh_aggregate = mesh_aggregate
+
+    def signature(self) -> dict:
+        return {"name": self.name, "n_rsus": self.n_rsus,
+                "count_scaled": self.count_scaled,
+                "mesh_aggregate": self.mesh_aggregate}
 
     def validate(self, cfg: FLConfig) -> None:
         _require_flsimco(cfg, "MultiRSU")
@@ -363,6 +417,14 @@ class HandoverMultiRSU(Topology):
         # recompile cost bucketing removes; keep the default on.
         self.bucketed = bucketed
 
+    def signature(self) -> dict:
+        return {"name": self.name, "n_rsus": self.n_rsus,
+                "rsu_range": self.rsu_range,
+                "round_duration": self.round_duration,
+                "stale_discount": self.stale_discount,
+                "sync_every": self.sync_every,
+                "count_scaled": self.count_scaled}
+
     def validate(self, cfg: FLConfig) -> None:
         _require_flsimco(cfg, "HandoverMultiRSU")
         if cfg.client != "dtssl":
@@ -385,62 +447,57 @@ class HandoverMultiRSU(Topology):
         return (np.floor_divide(np.asarray(positions), self.rsu_range)
                 .astype(np.int64) % self.n_rsus)
 
-    def run_round(self, state: FLState, scenario, parallel: bool = True):
-        cfg, mob = scenario.cfg, scenario.mobility
-        rng = unpack_host_rng(state.host_rng)
-        positions = np.asarray(state.topo["positions"])
-        rsu_models = list(state.topo["rsu_models"])
-        blur_sum = np.array(state.topo["blur_sum"], np.float64)
-        upload_count = np.array(state.topo["upload_count"], np.float64)
+    def plan_round(self, rng, key, rnd: int, positions, blur_sum,
+                   upload_count, scenario) -> dict:
+        """Everything about one handover round that does NOT depend on
+        training results: all RNG draws (in the documented order), the
+        download/upload grouping, Eq.-11 upload weights with staleness
+        discounts, motion, sync decision + level-2 weights, and the
+        accumulator updates. `run_round` executes a plan against the
+        models; the campaign engine (core/engine.py) replays K plans
+        ahead of time into schedule arrays — one code path for the
+        draws is what makes the two bitwise-identical.
 
+        Mutates nothing: takes positions/blur_sum/upload_count by value
+        and returns their successors in the plan dict.
+        """
+        cfg, mob = scenario.cfg, scenario.mobility
+        blur_sum = np.array(blur_sum, np.float64)
+        upload_count = np.array(upload_count, np.float64)
         n = cfg.vehicles_per_round
         ids = rng.choice(cfg.n_vehicles, size=n, replace=False)
         # one velocity draw per vehicle per round, used for both the blur
         # level of the participants' captures and the whole fleet's motion
-        key, kv = jax.random.split(state.key)
+        key, kv = jax.random.split(key)
         fleet_v = mob.sample(kv, cfg.n_vehicles)
         velocities = jnp.take(fleet_v, jnp.asarray(ids))
-        lr = scenario.lr_fn(state.round)
+        lr = scenario.lr_fn(rnd)
         key, *cks = jax.random.split(key, n + 1)
-        client = CLIENT_UPDATES[cfg.client]
 
-        # Step 2: download from the RSU covering the round-start position.
-        # parallel=True (default) runs each download group vmapped, padded
-        # to its power-of-two bucket so the set of compiled cohort sizes
-        # is bounded; parallel=False is the sequential reference path.
-        # Either way the group results stay STACKED in CohortBatches.
+        # Step 2 grouping: download from the RSU covering the round-start
+        # position; batch indices are drawn in download-group order (the
+        # host RNG is sequential) and scattered back to cohort positions
         down = self.rsu_index(positions[ids])
-        group_sel, group_cohorts = [], []
+        down_groups = []
+        idx = np.empty((n, cfg.batch_size), np.int64)
         for rsu in range(self.n_rsus):
             sel = np.where(down == rsu)[0]
             if sel.size == 0:
                 continue
-            batches = _draw_batches(rng, scenario, ids[sel], velocities[sel])
-            cohort, _ = client.run_cohort(
-                cfg, rsu_models[rsu], state.client_state, batches,
-                [cks[i] for i in sel], lr, parallel=parallel,
-                pad_to=bucket_size(int(sel.size))
-                if (parallel and self.bucketed) else None)
-            group_sel.append(sel)
-            group_cohorts.append(cohort)
-        # one stacked cohort of all n valid clients (padding dropped),
-        # rows in download-group order; row_of maps cohort index -> row
-        full = CohortBatch.concat(group_cohorts)
-        order = np.concatenate(group_sel)
-        row_of = np.empty(n, np.int64)
-        row_of[order] = np.arange(n)
+            for i in sel:
+                idx[i] = _batch_indices(rng, len(scenario.data[ids[i]]), cfg)
+            down_groups.append((rsu, sel))
 
         # motion during the round: everyone moves, positions wrap
         positions = np.asarray(mob.advance_positions(
             positions, fleet_v, self.round_duration, self.road_length))
 
-        # Step 3-4: upload to the RSU now covering the vehicle. Upload
-        # groups are device-side gathers out of the stacked cohort — the
-        # old path unstacked into n host trees and re-stacked per RSU.
+        # Step 3-4 grouping: upload to the RSU now covering the vehicle,
+        # stale uploads discounted before renormalization
         up = self.rsu_index(positions[ids])
         stale = up != down
         blur = np.asarray(mob.blur_level(velocities))
-        upload_sizes = []
+        upload_sizes, uploads = [], []
         for rsu in range(self.n_rsus):
             sel = np.where(up == rsu)[0]
             upload_sizes.append(int(sel.size))
@@ -455,18 +512,73 @@ class HandoverMultiRSU(Topology):
                 # none), rather than handing the discarded uploads full
                 # uniform weight
                 continue
-            sub = full.take(row_of[sel])
-            rsu_models[rsu] = agg.cohort_weighted_sum(sub, w / s)
+            uploads.append((rsu, sel, w / s))
             blur_sum[rsu] += float(blur[sel].sum())
             upload_count[rsu] += sel.size
 
-        synced = (state.round + 1) % self.sync_every == 0
-        new_tree = state.global_tree
+        synced = (rnd + 1) % self.sync_every == 0
+        sync_W = None
         if synced:
-            new_tree, rsu_models = self._region_sync(
-                mob, rsu_models, blur_sum, upload_count)
+            sync_W = _region_sync_weights(mob, blur_sum, upload_count,
+                                          self.count_scaled)
             blur_sum = np.zeros(self.n_rsus)
             upload_count = np.zeros(self.n_rsus)
+        return {"ids": ids, "idx": idx, "velocities": velocities,
+                "fleet_v": fleet_v, "lr": lr, "key": key, "cks": cks,
+                "down": down, "down_groups": down_groups,
+                "positions": positions, "up": up, "stale": stale,
+                "blur": blur, "uploads": uploads,
+                "upload_sizes": upload_sizes, "synced": synced,
+                "sync_W": sync_W, "blur_sum": blur_sum,
+                "upload_count": upload_count}
+
+    def run_round(self, state: FLState, scenario, parallel: bool = True):
+        cfg = scenario.cfg
+        rng = unpack_host_rng(state.host_rng)
+        rsu_models = list(state.topo["rsu_models"])
+        plan = self.plan_round(rng, state.key, state.round,
+                               np.asarray(state.topo["positions"]),
+                               state.topo["blur_sum"],
+                               state.topo["upload_count"], scenario)
+        ids, velocities, lr = plan["ids"], plan["velocities"], plan["lr"]
+        client = CLIENT_UPDATES[cfg.client]
+
+        # Step 2: each download group runs vmapped (parallel=True, the
+        # default), padded to its power-of-two bucket so the set of
+        # compiled cohort sizes is bounded; parallel=False is the
+        # sequential reference path. Either way the group results stay
+        # STACKED in CohortBatches.
+        group_sel, group_cohorts = [], []
+        for rsu, sel in plan["down_groups"]:
+            batches = jnp.stack([
+                _client_images(scenario, ids[i], plan["idx"][i],
+                               velocities[i]) for i in sel])
+            cohort, _ = client.run_cohort(
+                cfg, rsu_models[rsu], state.client_state, batches,
+                [plan["cks"][i] for i in sel], lr, parallel=parallel,
+                pad_to=bucket_size(int(sel.size))
+                if (parallel and self.bucketed) else None)
+            group_sel.append(sel)
+            group_cohorts.append(cohort)
+        # one stacked cohort of all n valid clients (padding dropped),
+        # rows in download-group order; row_of maps cohort index -> row
+        n = cfg.vehicles_per_round
+        full = CohortBatch.concat(group_cohorts)
+        order = np.concatenate(group_sel)
+        row_of = np.empty(n, np.int64)
+        row_of[order] = np.arange(n)
+
+        # Step 3-4: upload groups are device-side gathers out of the
+        # stacked cohort — the old path unstacked into n host trees and
+        # re-stacked per RSU
+        for rsu, sel, w in plan["uploads"]:
+            sub = full.take(row_of[sel])
+            rsu_models[rsu] = agg.cohort_weighted_sum(sub, w)
+
+        new_tree = state.global_tree
+        if plan["synced"]:
+            new_tree = agg._weighted_tree_sum(rsu_models, plan["sync_W"])
+            rsu_models = [new_tree] * self.n_rsus
         # between syncs global_tree keeps the last merged model; RSU models
         # stay divergent until sync (region_view() merges on demand without
         # paying an n_rsus-model sum every round)
@@ -475,11 +587,14 @@ class HandoverMultiRSU(Topology):
         rec = {"round": state.round, "loss": float(np.mean(losses)),
                "velocities": vels,
                "lr": float(lr), "topology": self.name,
-               "rsu_sizes": upload_sizes,
-               "n_handovers": int(stale.sum()), "synced": synced}
-        topo = {"positions": positions, "rsu_models": tuple(rsu_models),
-                "blur_sum": blur_sum, "upload_count": upload_count}
-        return state.replace(global_tree=new_tree, key=key,
+               "rsu_sizes": plan["upload_sizes"],
+               "n_handovers": int(plan["stale"].sum()),
+               "synced": plan["synced"]}
+        topo = {"positions": plan["positions"],
+                "rsu_models": tuple(rsu_models),
+                "blur_sum": plan["blur_sum"],
+                "upload_count": plan["upload_count"]}
+        return state.replace(global_tree=new_tree, key=plan["key"],
                              host_rng=pack_host_rng(rng),
                              round=state.round + 1, topo=topo), rec
 
@@ -487,22 +602,6 @@ class HandoverMultiRSU(Topology):
         """Uniform merge of the current per-RSU models — an evaluation
         snapshot between syncs; does not touch the state."""
         return agg.aggregate_fedavg(list(state.topo["rsu_models"]))
-
-    def _region_sync(self, mob, rsu_models, blur_sum, upload_count):
-        """Level-2 merge of the per-RSU models (Eq. 11 over mean blur,
-        optionally scaled by uploads since the last sync)."""
-        counts = upload_count
-        mean_blur = np.where(
-            counts > 0, blur_sum / np.maximum(counts, 1.0),
-            float(mob.blur_level(mob.mu)))   # no uploads: prior mean blur
-        W = np.asarray(agg.flsimco_weights(jnp.asarray(mean_blur,
-                                                       jnp.float32)))
-        if self.count_scaled:
-            W = W * counts
-        s = W.sum()
-        W = W / s if s > 1e-12 else np.full_like(W, 1.0 / len(W))
-        merged = agg._weighted_tree_sum(rsu_models, W)
-        return merged, [merged] * self.n_rsus
 
 
 TOPOLOGIES = {

@@ -86,6 +86,30 @@ def test_host_rng_pack_roundtrip():
                                   twin.choice(1000, size=50))
 
 
+@pytest.mark.parametrize("seed", range(10))
+def test_host_rng_pack_roundtrip_property(seed):
+    """Property (seed sweep): pack/unpack is the identity on the FULL
+    MT19937 state at arbitrary points mid-stream — including the cached
+    second gaussian, which `normal` draws leave behind and a lossy pack
+    would silently drop."""
+    draws = [lambda r: r.choice(50, size=5, replace=False),
+             lambda r: r.rand(3),
+             lambda r: r.normal(size=3),     # sets the gauss cache
+             lambda r: r.permutation(17),
+             lambda r: r.normal(size=2)]
+    rng = np.random.RandomState(seed)
+    for draw in draws:
+        draw(rng)
+        twin = unpack_host_rng(pack_host_rng(rng))
+        s1, s2 = rng.get_state(legacy=True), twin.get_state(legacy=True)
+        assert s1[0] == s2[0]
+        np.testing.assert_array_equal(s1[1], s2[1])
+        assert s1[2:] == s2[2:]
+        # and the futures coincide, not just the snapshots
+        np.testing.assert_array_equal(draw(rng), draw(twin))
+        rng = twin                            # continue from the copy
+
+
 @pytest.mark.parametrize("case", sorted(CASES))
 def test_resume_is_bit_exact(case, tmp_path):
     """10 rounds straight == 5 rounds + save + restore + 5 rounds, down to
@@ -148,3 +172,28 @@ def test_scenario_validation():
         Scenario(aggregator="fedco", client="dtssl")
     assert Scenario(aggregator="fedco").cfg.client == "fedco"
     assert Scenario(aggregator="fedco", client="fedco").cfg.client == "fedco"
+
+
+def test_fedco_alias_resolved_once_for_both_entry_points():
+    """`resolve_fedco_alias` is the single place the legacy spelling is
+    normalized: FLConfig and Scenario must agree on acceptance AND on
+    the conflict error, so the rule cannot drift between entry points."""
+    from repro.core.state import FLConfig, resolve_fedco_alias
+
+    assert resolve_fedco_alias("fedco", None) == ("fedavg", "fedco")
+    assert resolve_fedco_alias("fedco", "fedco") == ("fedavg", "fedco")
+    assert resolve_fedco_alias("flsimco", "dtssl") == ("flsimco", "dtssl")
+    assert resolve_fedco_alias(None, None) == (None, None)
+    with pytest.raises(ValueError, match="legacy alias"):
+        resolve_fedco_alias("fedco", "dtssl")
+
+    cfg = FLConfig(aggregator="fedco")
+    assert (cfg.aggregator, cfg.client) == ("fedavg", "fedco")
+    with pytest.raises(ValueError, match="legacy alias"):
+        FLConfig(aggregator="fedco", client="dtssl")
+    sc = Scenario(aggregator="fedco", queue_len=64)
+    assert (sc.cfg.aggregator, sc.cfg.client) == ("fedavg", "fedco")
+    # the alias also resolves when layered onto a pre-built cfg whose
+    # client field is already normalized to a concrete name
+    assert Scenario(FLConfig(queue_len=64),
+                    aggregator="fedco").cfg.client == "fedco"
