@@ -1,13 +1,28 @@
-"""Multi-RSU scaling benchmark: round latency over (vehicles x RSUs).
+"""Multi-RSU scaling benchmark: round latency over (vehicles x RSUs),
+plus the fleet-scale SHARDED aggregation sweep.
 
-Sweeps the topology layer end to end — per-RSU vmapped cohorts, two-level
-Eq.-11 aggregation, and (for the handover grid) position advancement and
-stale-upload reweighting — and reports us/round after a warmup round.
-Also times the host aggregation step alone under both weighted-sum
-backends (tree-map vs the fused wagg kernel in interpret mode) so the
-crossover is visible off-TPU.
+Default mode sweeps the topology layer end to end — per-RSU vmapped
+cohorts, two-level Eq.-11 aggregation, and (for the handover grid)
+position advancement and stale-upload reweighting — and reports us/round
+after a warmup round. Also times the host aggregation step alone under
+both weighted-sum backends (tree-map vs the fused wagg kernel in
+interpret mode) so the crossover is visible off-TPU.
+
+`--sharded` switches to the fleet-scale mode: cohorts of 1k-10k
+vehicles/round (small synthetic trees — client training at that scale is
+not a CPU benchmark, aggregation is) pushed through `sharded_aggregate`
+(gather and split reductions) and `sharded_hierarchical` on the
+("pod","data") mesh, against the single-device dispatch as both the
+baseline timing AND a bitwise-equality check. When fewer than 8 devices
+are visible the flag forces 8 host devices by setting XLA_FLAGS before
+jax is imported — this is why argv is inspected at module scope.
 
   PYTHONPATH=src python benchmarks/multi_rsu.py [--rounds 3]
+  PYTHONPATH=src python benchmarks/multi_rsu.py --sharded [--smoke]
+
+Writes benchmarks/results/BENCH_multi_rsu.json (uploaded as a CI
+artifact by the multidevice job; --smoke shrinks the sweep to one
+1k-vehicle point so the job stays in minutes).
 """
 import argparse
 import os
@@ -17,7 +32,17 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
+# Forcing host devices only works before jax initializes — peek at argv
+# prior to the jax import rather than after argparse runs.
+if ("--sharded" in sys.argv or "--smoke" in sys.argv) and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from common import build_world, emit, save_json
@@ -33,23 +58,107 @@ def time_rounds(scenario, n_rounds, parallel=True):
     return (time.perf_counter() - t0) / n_rounds * 1e6
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=3)
-    ap.add_argument("--batch", type=int, default=32)
-    # CPU-friendly default grid; widen on real hardware, e.g.
-    #   --vehicles 4 8 16 --rsus 1 2 4 8
-    ap.add_argument("--vehicles", type=int, nargs="+", default=[4])
-    ap.add_argument("--rsus", type=int, nargs="+", default=[1, 2, 4])
-    args = ap.parse_args()
-    if args.rounds < 1:
-        ap.error("--rounds must be >= 1")
+def _time_agg(fn, repeats):
+    out = fn()                                            # warmup/compile
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.perf_counter() - t0) / repeats * 1e6, out
 
+
+def _fleet_cohort(m, seed=0):
+    """m stacked per-vehicle trees, small on purpose: ~2.4k params per
+    vehicle keeps a 10k-vehicle cohort under 100 MB so the benchmark
+    prices the reduction, not the allocator."""
+    from repro.core.cohort import CohortBatch
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    trees = {"conv": jax.random.normal(ks[0], (m, 8, 3, 3)),
+             "dense": jax.random.normal(ks[1], (m, 48, 32)),
+             "head": jax.random.normal(ks[2], (m, 32, 8)),
+             "bias": jax.random.normal(ks[3], (m, 48))}
+    blur = jax.random.uniform(jax.random.fold_in(key, 9), (m,),
+                              minval=10.0, maxval=20.0)
+    return CohortBatch.from_stacked(trees, jnp.zeros((m,)), n=m, blur=blur)
+
+
+def _assert_bitwise(ref, got, label):
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise SystemExit(f"sharded result diverged from the "
+                             f"single-device reference: {label}")
+
+
+def run_sharded(args, results):
+    from repro.core.aggregation import AGGREGATORS
+    from repro.core.hierarchical import (aggregate_hierarchical,
+                                         sharded_aggregate,
+                                         sharded_hierarchical)
+    from repro.core.state import FLConfig
+    from repro.launch.mesh import cohort_axis_divisor, cohort_mesh
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        raise SystemExit(f"--sharded needs >= 2 devices, have {n_dev}; "
+                         "the module-scope XLA_FLAGS forcing should have "
+                         "provided 8 — is XLA_FLAGS already set?")
+    n_rsus = 2
+    fleet = [1024] if args.smoke else args.fleet
+    repeats = 1 if args.smoke else args.rounds
+    results["config"] = {"devices": n_dev, "n_rsus": n_rsus,
+                         "fleet": fleet, "repeats": repeats,
+                         "smoke": bool(args.smoke)}
+    cfg = FLConfig(aggregator="flsimco")
+
+    for m in fleet:
+        mesh = cohort_mesh(n_rsus, cohort_axis_divisor(m // n_rsus, n_rsus))
+        c = _fleet_cohort(m)
+        tag = f"V={m};mesh={dict(mesh.shape)}"
+
+        us_host, ref = _time_agg(
+            lambda: AGGREGATORS["flsimco"](c, cfg), repeats)
+        emit("sharded/host_reference/agg", us_host, tag)
+        results[f"host_v{m}"] = us_host
+
+        for reduction in ("gather", "split"):
+            us, got = _time_agg(
+                lambda r=reduction: sharded_aggregate(c, cfg, mesh,
+                                                      reduction=r), repeats)
+            _assert_bitwise(ref, got, f"{reduction} @ V={m}")
+            emit(f"sharded/{reduction}/agg", us, tag)
+            results[f"{reduction}_v{m}"] = us
+
+        # two-level Eq.-11 over the same fleet, m/2 vehicles per RSU
+        from repro.core.cohort import CohortBatch
+        blur = c.blur
+        cohorts = [CohortBatch.from_stacked(
+            jax.tree.map(lambda x, r=r: x[r * (m // 2):(r + 1) * (m // 2)],
+                         c.trees),
+            jnp.zeros((m // 2,)),
+            blur=blur[r * (m // 2):(r + 1) * (m // 2)])
+            for r in range(n_rsus)]
+        us_h, ref_h = _time_agg(
+            lambda: aggregate_hierarchical(cohorts), repeats)
+        emit("sharded/host_reference/hier", us_h, tag)
+        results[f"hier_host_v{m}"] = us_h
+        us_s, got_h = _time_agg(
+            lambda: sharded_hierarchical(c.trees, blur, mesh, n_rsus),
+            repeats)
+        _assert_bitwise(ref_h, got_h, f"hierarchical @ V={m}")
+        emit("sharded/mesh_exact/hier", us_s, tag)
+        results[f"hier_mesh_v{m}"] = us_s
+        sys.stdout.flush()
+
+    return results
+
+
+def run_topology(args, results):
     from repro.core import aggregation as agg
     from repro.core.scenario import Scenario
-    from repro.core.topology import HandoverMultiRSU, MultiRSU, SingleRSU
+    from repro.core.topology import HandoverMultiRSU, MultiRSU
 
-    results = {}
     x, y, parts, tree = build_world(n_vehicles=24, n_per_class=40,
                                     iid=True, alpha=0.0)
     data = [x[p] for p in parts]
@@ -100,8 +209,34 @@ def main():
             us = (time.perf_counter() - t0) / 3 * 1e6
         emit(f"topology/agg_{backend}/resnet18_n8", us, "")
         results[f"agg_{backend}"] = us
+    return results
 
-    save_json("multi_rsu.json", results)
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=32)
+    # CPU-friendly default grid; widen on real hardware, e.g.
+    #   --vehicles 4 8 16 --rsus 1 2 4 8
+    ap.add_argument("--vehicles", type=int, nargs="+", default=[4])
+    ap.add_argument("--rsus", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--sharded", action="store_true",
+                    help="fleet-scale sharded aggregation sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="imply --sharded; single 1k point, 1 repeat")
+    ap.add_argument("--fleet", type=int, nargs="+",
+                    default=[1024, 4096, 10240],
+                    help="vehicles/round for the sharded sweep")
+    args = ap.parse_args()
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
+
+    results = {}
+    if args.sharded or args.smoke:
+        run_sharded(args, results)
+    else:
+        run_topology(args, results)
+    save_json("BENCH_multi_rsu.json", results)
 
 
 if __name__ == "__main__":

@@ -218,46 +218,57 @@ def aggregate_inverse(trees: Sequence, blur_levels, eps: float = 1.0):
 # Uniform dispatch signature: (cohort, cfg) where `cohort` is a
 # `CohortBatch` (stacked trees + validity mask + device-resident
 # blur/velocities) and `cfg` supplies the scheme's knobs
-# (normalize_weights, blur_threshold). Weights are computed on the
-# static valid slice (`cohort.valid_blur`) and zero-padded, so a
-# bucketed (padded) cohort aggregates bit-exactly like an unpadded one
-# (tests/test_cohort.py). FLConfig validates its `aggregator` field
-# against this dict, so adding an entry here is the whole story for a
-# new scheme.
+# (normalize_weights, blur_threshold). Each scheme is fully described
+# by its WEIGHT function (``SCHEME_WEIGHTS``: (cohort, cfg) -> (n,)
+# weights over the valid rows); the dispatch entry is always the same
+# masked weighted sum over those weights. The split exists so the
+# sharded aggregation path (core/hierarchical.py) can reuse the exact
+# weight values — bit-for-bit the same scheme, only the reduction runs
+# under shard_map. Weights are computed on the static valid slice
+# (`cohort.valid_blur`) and zero-padded, so a bucketed (padded) cohort
+# aggregates bit-exactly like an unpadded one (tests/test_cohort.py).
+# FLConfig validates its `aggregator` field against these dicts, so
+# adding a SCHEME_WEIGHTS entry is the whole story for a new scheme.
 
-def _disp_flsimco(cohort, cfg):
-    w = flsimco_weights(cohort.valid_blur,
-                        getattr(cfg, "normalize_weights", True))
-    return cohort_weighted_sum(cohort, w)
+def _weights_flsimco(cohort, cfg):
+    return flsimco_weights(cohort.valid_blur,
+                           getattr(cfg, "normalize_weights", True))
 
 
-def _disp_fedavg(cohort, cfg):
-    return cohort_weighted_sum(
-        cohort, jnp.full((cohort.n,), 1.0 / cohort.n, jnp.float32))
+def _weights_fedavg(cohort, cfg):
+    return jnp.full((cohort.n,), 1.0 / cohort.n, jnp.float32)
 
 
-def _disp_discard(cohort, cfg):
+def _weights_discard(cohort, cfg):
     # thresholds the Eq.-2 BLUR LEVEL (not raw velocity) against
     # cfg.blur_threshold, as the registry documents
-    return cohort_weighted_sum(
-        cohort, discard_weights(cohort.valid_blur, cfg.blur_threshold))
+    return discard_weights(cohort.valid_blur, cfg.blur_threshold)
 
 
-def _disp_softmax(cohort, cfg):
-    return cohort_weighted_sum(cohort, softmax_weights(cohort.valid_blur))
+def _weights_softmax(cohort, cfg):
+    return softmax_weights(cohort.valid_blur)
 
 
-def _disp_inverse(cohort, cfg):
-    return cohort_weighted_sum(cohort, inverse_weights(cohort.valid_blur))
+def _weights_inverse(cohort, cfg):
+    return inverse_weights(cohort.valid_blur)
 
 
-AGGREGATORS = {
-    "flsimco": _disp_flsimco,
-    "fedavg": _disp_fedavg,
-    "discard": _disp_discard,
-    "softmax": _disp_softmax,
-    "inverse": _disp_inverse,
+SCHEME_WEIGHTS = {
+    "flsimco": _weights_flsimco,
+    "fedavg": _weights_fedavg,
+    "discard": _weights_discard,
+    "softmax": _weights_softmax,
+    "inverse": _weights_inverse,
 }
+
+
+def _make_dispatch(weight_fn):
+    def dispatch(cohort, cfg):
+        return cohort_weighted_sum(cohort, weight_fn(cohort, cfg))
+    return dispatch
+
+
+AGGREGATORS = {name: _make_dispatch(fn) for name, fn in SCHEME_WEIGHTS.items()}
 
 
 # --------------------------------------------------------------------------

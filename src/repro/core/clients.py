@@ -158,6 +158,37 @@ def _jitted_local_steps(cfg: FLConfig):
 
 
 @functools.lru_cache(maxsize=16)
+def _cached_sharded_steps(local_iters, momentum, weight_decay,
+                          tau_alpha, tau_beta, mesh):
+    """The vmapped cohort step under shard_map: each device trains its
+    block of the cohort (rows sharded over the mesh's federated axes),
+    the init tree and lr replicated. Block width = cohort / devices, so
+    vmap batching math runs at a DIFFERENT width than the single-device
+    reference — float-close, never bitwise, versus the unsharded vmap
+    (DESIGN.md §Sharded cohorts); bitwise-deterministic within the
+    sharded mode itself."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    f = make_local_train_step(FLConfig(
+        local_iters=local_iters, momentum=momentum,
+        weight_decay=weight_decay, tau_alpha=tau_alpha, tau_beta=tau_beta))
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    vf = jax.vmap(f, in_axes=(None, 0, 0, None))
+    return jax.jit(shard_map(
+        vf, mesh=mesh,
+        in_specs=(P(), P(axes), P(axes), P()),
+        out_specs=(P(axes), P(axes)), check=False))
+
+
+def _jitted_sharded_steps(cfg: FLConfig, mesh):
+    return _cached_sharded_steps(cfg.local_iters, cfg.momentum,
+                                 cfg.weight_decay, cfg.tau_alpha,
+                                 cfg.tau_beta, mesh)
+
+
+@functools.lru_cache(maxsize=16)
 def _cached_raw_step(local_iters, momentum, weight_decay,
                      tau_alpha, tau_beta):
     return make_local_train_step(FLConfig(
@@ -201,6 +232,7 @@ def reset_cohort_step_caches() -> None:
     _cached_local_steps.cache_clear()
     _cached_moco_step.cache_clear()
     _cached_raw_step.cache_clear()
+    _cached_sharded_steps.cache_clear()
 
 
 # --------------------------------------------------------------------------
@@ -235,7 +267,8 @@ class DTSSLClient:
         return None
 
     def run_cohort(self, cfg: FLConfig, tree, client_state, batches, keys,
-                   lr, parallel: bool = True, pad_to: int | None = None):
+                   lr, parallel: bool = True, pad_to: int | None = None,
+                   mesh=None):
         """Run one cohort of clients from init model `tree`.
 
         `parallel=True` vmaps the cohort over a stacked tree and returns
@@ -244,6 +277,15 @@ class DTSSLClient:
         so variable-size cohorts share compilations. The sequential path
         is the tested-equivalent reference (tests/test_federation.py,
         tests/test_topology.py).
+
+        `mesh` (a cohort mesh, launch/mesh.py) additionally shards the
+        cohort rows over the mesh's federated axes: each device vmaps its
+        own block. Pads to a multiple of the mesh extent (replicated last
+        row — no RNG consumed, padding masked out downstream), so a
+        cohort smaller than the mesh still runs. The block-sharded vmap
+        batches at a different width than the single-device reference, so
+        this path is float-close, not bitwise, versus `parallel=True`
+        without a mesh (DESIGN.md §Sharded cohorts).
         """
         local, vlocal = _jitted_local_steps(cfg)
         n = len(keys)
@@ -256,6 +298,16 @@ class DTSSLClient:
             return CohortBatch.from_list(client_trees, losses), None
         m = n if pad_to is None else pad_to
         keys_arr = keys if hasattr(keys, "shape") else jnp.stack(list(keys))
+        if mesh is not None and mesh.size > 1:
+            ext = 1
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    ext *= mesh.shape[a]
+            m = -(-m // ext) * ext
+            batches, keys_arr = _pad_cohort_inputs(batches, keys_arr, m)
+            trees, losses = _jitted_sharded_steps(cfg, mesh)(
+                tree, batches, keys_arr, lr)
+            return CohortBatch.from_stacked(trees, losses, n=n), None
         batches, keys_arr = _pad_cohort_inputs(batches, keys_arr, m)
         trees, losses = vlocal(tree, batches, keys_arr, lr)
         return CohortBatch.from_stacked(trees, losses, n=n), None
@@ -284,7 +336,9 @@ class FedCoClient:
                 "queue": queue}
 
     def run_cohort(self, cfg: FLConfig, tree, client_state, batches, keys,
-                   lr, parallel: bool = True, pad_to: int | None = None):
+                   lr, parallel: bool = True, pad_to: int | None = None,
+                   mesh=None):
+        # mesh accepted (uniform registry signature) and ignored:
         # sequential by design: the MoCo step threads a key-encoder EMA
         # whose updates are not batchable across clients — the result is
         # still stacked into a CohortBatch so aggregation sees one

@@ -172,6 +172,61 @@ class CohortBatch:
             trees, self.valid_losses[idx],
             velocities=pick(self.velocities), blur=pick(self.blur))
 
+    # -- sharding (DESIGN.md §Sharded cohorts) -------------------------------
+
+    @staticmethod
+    def sharding_spec(mesh):
+        """NamedSharding partitioning the leading cohort axis over the
+        mesh's federated axes (("pod", "data") on a cohort mesh) — the
+        one spec every sharded-cohort boundary uses."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        return NamedSharding(mesh, PartitionSpec(axes))
+
+    def pad_to(self, m: int) -> "CohortBatch":
+        """Re-pad the cohort to m rows by replicating the LAST row of
+        every leaf (trees, losses, stats) — finite values, no RNG, and
+        the mask still marks only the valid prefix [0, n), so every
+        masked aggregation is bit-exact with the unpadded cohort (the
+        same +0.0 argument as `padded_weights`)."""
+        if m < self.size:
+            raise ValueError(f"pad_to({m}) smaller than current padded "
+                             f"size {self.size}")
+        if m == self.size:
+            return self
+        pad = m - self.size
+
+        def ext(x):
+            if x is None:
+                return None
+            reps = jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])
+            return jnp.concatenate([x, reps])
+
+        return CohortBatch(trees=jax.tree.map(ext, self.trees),
+                           losses=ext(self.losses),
+                           mask=(jnp.arange(m) < self.n).astype(jnp.float32),
+                           n=self.n, velocities=ext(self.velocities),
+                           blur=ext(self.blur))
+
+    def shard(self, mesh) -> "CohortBatch":
+        """Place the cohort on `mesh` with the leading axis partitioned
+        over the federated axes. Pads (replicated last row, masked out)
+        up to the next multiple of the mesh's cohort extent first, so a
+        cohort smaller than the mesh still shards — some devices then
+        hold only padding rows, which zero weights make exact no-ops."""
+        spec = self.sharding_spec(mesh)
+        ext = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                ext *= mesh.shape[a]
+        m = -(-self.size // ext) * ext
+        return jax.device_put(self.pad_to(m), spec)
+
+    def gather(self) -> "CohortBatch":
+        """Undo `shard()`: the same cohort with every leaf resident on
+        one device (device-side transfer, values untouched)."""
+        return jax.device_put(self, jax.devices()[0])
+
     def padded_weights(self, w_valid) -> jnp.ndarray:
         """(n,) weights over the valid rows -> (m,) with zero padding.
 

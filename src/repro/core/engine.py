@@ -100,11 +100,11 @@ def check_campaign_supported(scenario) -> None:
             f"client={cfg.client!r} is sequential (FedCo threads a MoCo "
             "key-encoder/queue through the cohort). Use the eager "
             "run()/run_round() loop for it.")
-    if type(topo) is MultiRSU and topo.mesh_aggregate:
-        raise ValueError(
-            "run_campaign does not trace the mesh_aggregate collective "
-            "(shard_map inside the round body); use mesh_aggregate=False "
-            "or the eager run() loop.")
+    if type(topo) is MultiRSU:
+        # resolves the cohort mesh the compiled body will trace with —
+        # raises the actionable mesh_aggregate errors (uneven cohorts,
+        # missing devices) before any compile
+        topo.resolve_mesh(cfg)
     if type(topo) not in (SingleRSU, MultiRSU, HandoverMultiRSU):
         raise ValueError(
             f"run_campaign supports the built-in topologies "
@@ -230,25 +230,60 @@ def _client_batches(dstack, ids, idx, velocities, scenario):
 
 
 def _build_cohort_body(scenario):
-    """Round body for SingleRSU / MultiRSU: carry = (global_tree,)."""
+    """Round body for SingleRSU / MultiRSU: carry = (global_tree,).
+
+    When MultiRSU resolves a multi-device cohort mesh (the default with
+    >1 device — see `MultiRSU.resolve_mesh`), the traced body runs the
+    client blocks under shard_map and routes the two-level reduction
+    through `sharded_hierarchical` — the compiled path and the sharded
+    path COMPOSE (shard_map inlines into the jitted round program), one
+    program per campaign either way.
+    """
     cfg, topo = scenario.cfg, scenario.topology
     local = raw_local_step(cfg)
+    mesh = None
     if type(topo) is MultiRSU:
         assign = np.arange(cfg.vehicles_per_round) % topo.n_rsus
         sels = [np.where(assign == r)[0] for r in range(topo.n_rsus)]
         sels = [s for s in sels if s.size]
         count_scaled = topo.count_scaled
+        mesh = topo.resolve_mesh(cfg)
+        if mesh is not None and mesh.size > 1:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.compat import shard_map
+            from repro.core.hierarchical import sharded_hierarchical
+            axes = tuple(a for a in mesh.axis_names
+                         if a in ("pod", "data"))
+            # rsu-major permutation: client blocks shard in cohort order
+            # (losses stream out in cohort order, same as the host body),
+            # the reduction sees rsu-major rows
+            perm = np.concatenate(sels)
+            sh_step = shard_map(
+                jax.vmap(local, in_axes=(None, 0, 0, None)), mesh=mesh,
+                in_specs=(P(), P(axes), P(axes), P()),
+                out_specs=(P(axes), P(axes)), check=False)
+        else:
+            mesh = None
     aggregator = agg.AGGREGATORS[cfg.aggregator]
 
     def body(dstack, carry, xs):
         (tree,) = carry
         ids, idx, cks, velocities, blur, lr = xs
         batches = _client_batches(dstack, ids, idx, velocities, scenario)
-        trees, losses = jax.vmap(local, in_axes=(None, 0, 0, None))(
-            tree, batches, cks, lr)
+        if mesh is not None:
+            trees, losses = sh_step(tree, batches, cks, lr)
+        else:
+            trees, losses = jax.vmap(local, in_axes=(None, 0, 0, None))(
+                tree, batches, cks, lr)
         trees, losses, blur = jax.lax.optimization_barrier(
             (trees, losses, blur))
-        if type(topo) is MultiRSU:
+        if mesh is not None:
+            new_tree = sharded_hierarchical(
+                jax.tree.map(lambda x: x[perm], trees), blur[perm], mesh,
+                len(sels), count_scaled=count_scaled,
+                reduction=topo.mesh_reduction)
+        elif type(topo) is MultiRSU:
             cohorts = [
                 CohortBatch.from_stacked(
                     jax.tree.map(lambda x: x[sel], trees), losses[sel]

@@ -52,13 +52,12 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core.clients import CLIENT_UPDATES
 from repro.core.cohort import CohortBatch, bucket_size
 from repro.core.hierarchical import (aggregate_hierarchical,
-                                     two_stage_weighted_psum)
+                                     sharded_hierarchical)
 from repro.core.mobility import apply_motion_blur
 from repro.core.state import FLConfig, FLState, pack_host_rng, unpack_host_rng
 
@@ -245,74 +244,127 @@ class MultiRSU(Topology):
     The sampled cohort is dealt round-robin across RSUs; each RSU runs its
     vehicles as one vmapped batch. Aggregation is two-level: Eq.-11 within
     each RSU, then blur-weighted (optionally vehicle-count-scaled) across
-    RSU models — `aggregate_hierarchical` on host, or the
-    `two_stage_weighted_psum` collective over a (pod=n_rsus, data=cohort)
-    mesh when `mesh_aggregate=True` and enough devices exist.
+    RSU models — `sharded_hierarchical` over a cached (pod=n_rsus, data=d)
+    cohort mesh BY DEFAULT whenever >1 device is visible and the cohort
+    splits evenly (mesh_aggregate=None auto; the "exact" reduction is
+    bit-exact with the host path), `aggregate_hierarchical` on host
+    otherwise. mesh_aggregate=True forces the mesh (actionable error when
+    infeasible); False pins the host path. On a multi-device mesh the
+    whole round shards: client blocks run under shard_map too
+    (float-close vs the single-device vmap width — DESIGN.md §Sharded
+    cohorts).
     """
 
     name = "multi"
 
     def __init__(self, n_rsus: int = 2, count_scaled: bool = True,
-                 mesh_aggregate: bool = False):
+                 mesh_aggregate: bool | None = None,
+                 mesh_reduction: str = "exact"):
         if n_rsus < 1:
             raise ValueError("n_rsus must be >= 1")
+        if mesh_reduction not in ("exact", "psum"):
+            raise ValueError(f"mesh_reduction {mesh_reduction!r} not in "
+                             f"('exact', 'psum')")
         self.n_rsus = n_rsus
         self.count_scaled = count_scaled
+        # None = AUTO (the default): shard whenever >1 device is visible
+        # and the cohort splits evenly across RSUs; True forces the mesh
+        # path (raising an actionable error when infeasible); False pins
+        # the host path.
         self.mesh_aggregate = mesh_aggregate
+        self.mesh_reduction = mesh_reduction
 
     def signature(self) -> dict:
         return {"name": self.name, "n_rsus": self.n_rsus,
                 "count_scaled": self.count_scaled,
-                "mesh_aggregate": self.mesh_aggregate}
+                "mesh_aggregate": self.mesh_aggregate,
+                "mesh_reduction": self.mesh_reduction}
 
-    def validate(self, cfg: FLConfig) -> None:
-        _require_flsimco(cfg, "MultiRSU")
-        if self.mesh_aggregate:
-            # fail before any training work, not after the cohort has run
-            n = cfg.vehicles_per_round
-            if n % self.n_rsus:
+    def resolve_mesh(self, cfg: FLConfig):
+        """The cohort mesh this topology's rounds run on, or None for the
+        single-device host path. AUTO (mesh_aggregate=None) promotes the
+        sharded path to the default whenever >1 device is visible and the
+        cohort splits evenly; explicit True raises actionable errors
+        (required vs available devices, uneven-cohort hint) instead of
+        silently falling back."""
+        from repro.launch.mesh import (cohort_axis_divisor, cohort_mesh,
+                                       maybe_cohort_mesh)
+        if self.mesh_aggregate is False:
+            return None
+        n = cfg.vehicles_per_round
+        if n % self.n_rsus:
+            if self.mesh_aggregate:   # explicit True: fail, don't fall back
                 raise ValueError(
                     f"mesh_aggregate needs equal per-RSU cohorts: "
                     f"vehicles_per_round={n} not divisible by "
-                    f"n_rsus={self.n_rsus}")
-            if jax.device_count() < n:
-                raise ValueError(
-                    f"mesh_aggregate needs {n} devices "
-                    f"({self.n_rsus} RSUs x {n // self.n_rsus} vehicles); "
-                    f"have {jax.device_count()}")
+                    f"n_rsus={self.n_rsus} — pick n_rsus dividing the "
+                    f"cohort, or mesh_aggregate=None to auto-fall-back")
+            return None
+        s = n // self.n_rsus
+        if self.mesh_aggregate:
+            return cohort_mesh(self.n_rsus,
+                               cohort_axis_divisor(s, self.n_rsus))
+        return maybe_cohort_mesh(self.n_rsus, s)
+
+    def validate(self, cfg: FLConfig) -> None:
+        _require_flsimco(cfg, "MultiRSU")
+        # fail before any training work, not after the cohort has run
+        self.resolve_mesh(cfg)
 
     def run_round(self, state: FLState, scenario, parallel: bool = True):
         cfg, mob = scenario.cfg, scenario.mobility
         rng, ids, velocities, lr, key, cks = _sample_cohort(state, scenario)
         blur = mob.blur_level(velocities)
         client = CLIENT_UPDATES[cfg.client]
+        mesh = self.resolve_mesh(cfg)
         # draw every batch in round order BEFORE partitioning: the host RNG
         # is sequential, so this keeps MultiRSU(1) bit-identical to SingleRSU
         batches = _draw_batches(rng, scenario, ids, velocities)
         assign = np.arange(len(ids)) % self.n_rsus
-        cohorts, sizes, uploads = [], [], []
-        for rsu in range(self.n_rsus):
-            sel = np.where(assign == rsu)[0]
-            if sel.size == 0:
-                continue
-            cohort, ups = client.run_cohort(
-                cfg, state.global_tree, state.client_state, batches[sel],
-                [cks[i] for i in sel], lr, parallel)
-            cohorts.append(cohort.with_stats(velocities=velocities[sel],
-                                             blur=blur[sel]))
-            sizes.append(int(sel.size))
-            if ups:
-                uploads.extend(ups)
-        if self.mesh_aggregate:
-            new_tree = self._mesh_aggregate(cohorts)
+        sels = [np.where(assign == rsu)[0] for rsu in range(self.n_rsus)]
+        sels = [s for s in sels if s.size]
+        if (mesh is not None and parallel and mesh.size > 1
+                and cfg.client == "dtssl"):
+            # fully sharded round: ONE rsu-major cohort, client blocks and
+            # the two-level reduction both under shard_map. Client
+            # execution vmaps per device block (float-close vs the
+            # unsharded vmap width); the aggregation itself is bit-exact
+            # with the host path (DESIGN.md §Sharded cohorts).
+            perm = np.concatenate(sels)
+            cohort, uploads = client.run_cohort(
+                cfg, state.global_tree, state.client_state, batches[perm],
+                jnp.stack([cks[i] for i in perm]), lr, parallel, mesh=mesh)
+            blur_rm = jnp.asarray(blur, jnp.float32)[perm]
+            cohort = cohort.with_stats(velocities=velocities[perm],
+                                       blur=blur_rm)
+            new_tree = sharded_hierarchical(
+                cohort.valid_trees, blur_rm, mesh, len(sels),
+                count_scaled=self.count_scaled,
+                reduction=self.mesh_reduction)
+            sizes = [int(s.size) for s in sels]
+            losses = cohort.valid_losses   # already rsu-major
+            uploads = list(uploads) if uploads else []
         else:
-            new_tree = aggregate_hierarchical(cohorts,
-                                              count_scaled=self.count_scaled)
+            cohorts, sizes, uploads = [], [], []
+            for sel in sels:
+                cohort, ups = client.run_cohort(
+                    cfg, state.global_tree, state.client_state,
+                    batches[sel], [cks[i] for i in sel], lr, parallel)
+                cohorts.append(cohort.with_stats(velocities=velocities[sel],
+                                                 blur=blur[sel]))
+                sizes.append(int(sel.size))
+                if ups:
+                    uploads.extend(ups)
+            if mesh is not None:
+                new_tree = self._mesh_aggregate(cohorts, mesh)
+            else:
+                new_tree = aggregate_hierarchical(
+                    cohorts, count_scaled=self.count_scaled)
+            losses = jnp.concatenate([c.valid_losses for c in cohorts])
         new_cs = client.finalize(cfg, state.client_state, new_tree,
                                  uploads or None)
         # losses in RSU order (matching the old list-extend order), one fetch
-        losses, vels = _record_fetch(
-            jnp.concatenate([c.valid_losses for c in cohorts]), velocities)
+        losses, vels = _record_fetch(losses, velocities)
         rec = {"round": state.round, "loss": float(np.mean(losses)),
                "velocities": vels,
                "lr": float(lr), "topology": self.name, "rsu_sizes": sizes}
@@ -321,41 +373,25 @@ class MultiRSU(Topology):
                              round=state.round + 1,
                              client_state=new_cs), rec
 
-    def _mesh_aggregate(self, cohorts: Sequence[CohortBatch]):
-        """Region merge as the two-stage collective over a (pod, data) mesh.
-
-        Requires equal cohort sizes and n_rsus * cohort_size devices — the
-        mesh *is* the topology here (one device slice per vehicle).
-        """
+    def _mesh_aggregate(self, cohorts: Sequence[CohortBatch], mesh):
+        """Region merge sharded over the cached cohort mesh
+        (launch/mesh.py — the old code built a fresh `jax.make_mesh`
+        every round). reduction="exact" (default) is bit-exact with
+        `aggregate_hierarchical`; "psum" is the blocked
+        `two_stage_weighted_psum` collective (documented-float-close)."""
         sizes = {c.n for c in cohorts}
         if len(sizes) != 1:
             raise ValueError("mesh_aggregate needs equal per-RSU cohorts; "
                              f"got sizes {sorted(c.n for c in cohorts)}")
-        m = sizes.pop()
-        need = len(cohorts) * m
-        if jax.device_count() < need:
-            raise ValueError(
-                f"mesh_aggregate needs {need} devices "
-                f"({len(cohorts)} RSUs x {m} vehicles); "
-                f"have {jax.device_count()}")
-        mesh = jax.make_mesh((len(cohorts), m), ("pod", "data"))
         # rsu-major stacked cohort: concatenate the already-stacked valid
         # leaves — the old list path re-stacked N separate trees here
         stacked = jax.tree.map(lambda *ls: jnp.concatenate(ls),
                                *[c.valid_trees for c in cohorts])
         blur = jnp.concatenate([c.valid_blur.astype(jnp.float32)
                                 for c in cohorts])
-
-        def per_cohort(tree, L):
-            return two_stage_weighted_psum(
-                jax.tree.map(lambda x: x[0], tree), L[0],
-                count_scaled=self.count_scaled)
-
-        from repro.compat import shard_map
-        fn = shard_map(per_cohort, mesh=mesh,
-                       in_specs=(P(("pod", "data")), P(("pod", "data"))),
-                       out_specs=P(), check=False)
-        return fn(stacked, blur)
+        return sharded_hierarchical(stacked, blur, mesh, len(cohorts),
+                                    count_scaled=self.count_scaled,
+                                    reduction=self.mesh_reduction)
 
 
 class HandoverMultiRSU(Topology):
@@ -397,7 +433,7 @@ class HandoverMultiRSU(Topology):
     def __init__(self, n_rsus: int = 2, rsu_range: float = 1000.0,
                  round_duration: float = 20.0, stale_discount: float = 0.5,
                  sync_every: int = 5, count_scaled: bool = True,
-                 bucketed: bool = True):
+                 bucketed: bool = True, mesh_shard: bool = False):
         if n_rsus < 1:
             raise ValueError("n_rsus must be >= 1")
         if not 0.0 <= stale_discount <= 1.0:
@@ -416,6 +452,14 @@ class HandoverMultiRSU(Topology):
         # produces. Exists so benchmarks/round_engine.py can price the
         # recompile cost bucketing removes; keep the default on.
         self.bucketed = bucketed
+        # mesh_shard=True shards each download group's client execution
+        # over a (pod=1, data=d) cohort mesh when >1 device is visible;
+        # the per-RSU regrouping stays device-side `CohortBatch.take`
+        # gathers under the sharding. Opt-in (not auto like MultiRSU):
+        # the sharded vmap width differs from the single-device one, so
+        # this path is float-close, not bitwise, with the bucketed
+        # reference the handover tests pin.
+        self.mesh_shard = mesh_shard
 
     def signature(self) -> dict:
         return {"name": self.name, "n_rsus": self.n_rsus,
@@ -423,7 +467,8 @@ class HandoverMultiRSU(Topology):
                 "round_duration": self.round_duration,
                 "stale_discount": self.stale_discount,
                 "sync_every": self.sync_every,
-                "count_scaled": self.count_scaled}
+                "count_scaled": self.count_scaled,
+                "mesh_shard": self.mesh_shard}
 
     def validate(self, cfg: FLConfig) -> None:
         _require_flsimco(cfg, "HandoverMultiRSU")
@@ -548,6 +593,10 @@ class HandoverMultiRSU(Topology):
         # compiled cohort sizes is bounded; parallel=False is the
         # sequential reference path. Either way the group results stay
         # STACKED in CohortBatches.
+        mesh = None
+        if self.mesh_shard and parallel:
+            from repro.launch.mesh import maybe_cohort_mesh
+            mesh = maybe_cohort_mesh(1, bucket_size(cfg.vehicles_per_round))
         group_sel, group_cohorts = [], []
         for rsu, sel in plan["down_groups"]:
             batches = jnp.stack([
@@ -557,7 +606,7 @@ class HandoverMultiRSU(Topology):
                 cfg, rsu_models[rsu], state.client_state, batches,
                 [plan["cks"][i] for i in sel], lr, parallel=parallel,
                 pad_to=bucket_size(int(sel.size))
-                if (parallel and self.bucketed) else None)
+                if (parallel and self.bucketed) else None, mesh=mesh)
             group_sel.append(sel)
             group_cohorts.append(cohort)
         # one stacked cohort of all n valid clients (padding dropped),

@@ -8,10 +8,80 @@ those axes (DESIGN.md §2).
 
 A FUNCTION, not a module constant: importing this module must never touch
 jax device state (smoke tests see 1 CPU device; only dryrun.py forces 512).
+
+Cohort meshes (DESIGN.md §Sharded cohorts): a stacked `CohortBatch` of
+R RSUs x s vehicles shards its leading cohort axis over a
+(pod=R, data=d) mesh with d | s, so every device owns a contiguous
+rsu-aligned block of vehicles. `cohort_mesh` builds (and CACHES) that
+mesh — `MultiRSU._mesh_aggregate` used to call `jax.make_mesh` every
+round — and `maybe_cohort_mesh` is the auto-resolution the topologies
+use to promote the sharded path to the default whenever >1 device is
+visible.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+
+COHORT_AXES = ("pod", "data")
+
+_FORCE_HINT = ("run under XLA_FLAGS=--xla_force_host_platform_device_count=N "
+               "to force N host devices on CPU, or drop to the host path "
+               "(mesh_aggregate=False)")
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_cached(shape: tuple, names: tuple):
+    return jax.make_mesh(shape, names)
+
+
+def cohort_mesh(pods: int, data: int):
+    """The (pod=pods, data=data) mesh a stacked cohort shards over.
+
+    Cached on the shape — building a `jax.make_mesh` per round (the old
+    `MultiRSU._mesh_aggregate` behavior) re-enumerates devices every
+    time. Raises with an actionable message (required vs available
+    device counts + the CPU forcing hint) instead of jax's bare error.
+    """
+    if pods < 1 or data < 1:
+        raise ValueError(f"cohort mesh axes must be >= 1, got "
+                         f"(pod={pods}, data={data})")
+    need, have = pods * data, jax.device_count()
+    if have < need:
+        raise ValueError(
+            f"cohort mesh (pod={pods}, data={data}) needs {need} devices; "
+            f"have {have} — {_FORCE_HINT}")
+    return _mesh_cached((pods, data), COHORT_AXES)
+
+
+def cohort_axis_divisor(rows_per_pod: int, pods: int,
+                        device_count: int = None) -> int:
+    """Largest d with d | rows_per_pod and pods * d <= device_count — the
+    widest data axis that keeps every per-RSU block device-aligned
+    without padding."""
+    if device_count is None:
+        device_count = jax.device_count()
+    cap = max(1, device_count // max(pods, 1))
+    for d in range(min(rows_per_pod, cap), 0, -1):
+        if rows_per_pod % d == 0:
+            return d
+    return 1
+
+
+def maybe_cohort_mesh(pods: int, rows_per_pod: int):
+    """Auto-resolution for the default sharded path: the widest feasible
+    (pod=pods, data=d) cohort mesh, or None when fewer than 2 devices
+    are usable (the single-device host path stays the default there)."""
+    if pods < 1 or rows_per_pod < 1:
+        return None
+    have = jax.device_count()
+    if have < 2 or have < pods:
+        return None
+    d = cohort_axis_divisor(rows_per_pod, pods, have)
+    if pods * d < 2:
+        return None
+    return cohort_mesh(pods, d)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

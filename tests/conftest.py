@@ -16,3 +16,9 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers",
+        "multidevice: needs multiple jax devices (tests/multidevice/ runs "
+        "in a subprocess with XLA_FLAGS=--xla_force_host_platform_"
+        "device_count=8; this conftest imports jax, so forcing cannot "
+        "happen in-process)")

@@ -1,0 +1,32 @@
+"""Multi-device (forced 8-CPU-device) suite.
+
+Everything under tests/multidevice/ assumes `jax.device_count() >= 8`.
+The top-level tests/conftest.py deliberately sets no XLA_FLAGS (tier-1
+must see the single real device) and imports jax, so device forcing
+cannot happen in this process once tier-1 has started — instead
+tests/test_sharded_cohort.py drives this directory in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=8, and the CI
+`multidevice` job exports the flag before invoking pytest directly.
+Run by hand with:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/multidevice -q
+
+When fewer than 8 devices are visible every test here skips cleanly.
+"""
+import jax
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    marker = pytest.mark.multidevice
+    skip = pytest.mark.skip(
+        reason=f"needs 8 jax devices, have {jax.device_count()} — set "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+               "jax imports (or run tests/test_sharded_cohort.py, which "
+               "spawns the forced subprocess)")
+    for item in items:
+        if "tests/multidevice" in str(item.fspath).replace("\\", "/"):
+            item.add_marker(marker)
+            if jax.device_count() < 8:
+                item.add_marker(skip)

@@ -1,0 +1,297 @@
+"""Sharded-cohort aggregation: the bit-exactness contracts under a real
+(pod, data) mesh (DESIGN.md §Sharded cohorts), on forced 8-CPU devices.
+
+Layers pinned here:
+
+  1. `sharded_aggregate` ("gather" and "split") is BITWISE identical to
+     the single-device `AGGREGATORS` dispatch for all five schemes, on
+     both weighted-sum backends, including padding edge cases (cohort
+     smaller than the mesh, all-invalid shards).
+  2. `sharded_hierarchical` reduction="exact" is bitwise with
+     `aggregate_hierarchical`; reduction="psum" (the blocked
+     `two_stage_weighted_psum` collective) is float-close (atol 1e-5).
+  3. `MultiRSU` auto-promotes to the mesh (mesh_aggregate=None default)
+     and the sequential-client mesh round stays bitwise with the host
+     round; the parallel sharded round is deterministic and float-close
+     versus host (the block-sharded vmap batches at a different width —
+     never bitwise, by design).
+  4. `run_cohort(mesh=...)` shards client execution with valid-prefix
+     semantics intact; `CohortBatch.shard`/`gather` round-trip values.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.aggregation import AGGREGATORS, SCHEME_WEIGHTS
+from repro.core.cohort import CohortBatch
+from repro.core.hierarchical import (aggregate_hierarchical,
+                                     sharded_aggregate,
+                                     sharded_cohort_sum,
+                                     sharded_hierarchical)
+from repro.core.state import FLConfig
+from repro.launch.mesh import cohort_mesh, maybe_cohort_mesh
+
+pytestmark = []  # marker applied by conftest
+
+
+def _stacked_trees(key, m, shapes=((4, 3), (7,))):
+    return {"a": jax.random.normal(key, (m,) + shapes[0]),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (m,) + shapes[1])}}
+
+
+def _cohort(key, n, m, blur=None):
+    trees = _stacked_trees(key, m)
+    losses = jax.random.uniform(jax.random.fold_in(key, 2), (m,))
+    if blur is None:
+        blur = jax.random.uniform(jax.random.fold_in(key, 3), (n,),
+                                  minval=10.0, maxval=20.0)
+    blur_pad = jnp.concatenate(
+        [jnp.asarray(blur, jnp.float32),
+         jnp.full((m - n,), 99.0, jnp.float32)])  # garbage padding blur
+    return CohortBatch.from_stacked(trees, losses, n=n, blur=blur_pad)
+
+
+def _assert_trees_equal(t1, t2):
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+MESH = lambda: cohort_mesh(2, 4)  # noqa: E731 — lazy, after device check
+
+
+# --------------------------------------------------------------------------
+# flat sharded aggregation: bitwise vs the single-device dispatch
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["tree", "interpret"])
+@pytest.mark.parametrize("name", sorted(AGGREGATORS))
+def test_sharded_gather_bit_exact_all_schemes(name, backend):
+    """Acceptance: sharded aggregation == single-device cohort path,
+    bit for bit, all five schemes, both backends, with padding."""
+    cfg = FLConfig(aggregator=name)
+    # straddle the default blur_threshold so "discard" keeps a subset
+    c = _cohort(jax.random.PRNGKey(0), n=5, m=8,
+                blur=jnp.array([11.6, 17.4, 12.8, 19.0, 14.2]))
+    with agg.wagg_backend(backend):
+        ref = AGGREGATORS[name](c, cfg)
+        got = sharded_aggregate(c, cfg, MESH())
+    _assert_trees_equal(ref, got)
+
+
+@pytest.mark.parametrize("name", sorted(AGGREGATORS))
+def test_sharded_split_bit_exact_vs_tree_backend(name):
+    """The all-to-all parameter-sharded reduction preserves the row
+    summation order of the single-device tensordot — bitwise with the
+    tree backend, at O(m*P/devices) per-device memory."""
+    cfg = FLConfig(aggregator=name)
+    c = _cohort(jax.random.PRNGKey(1), n=6, m=8)
+    with agg.wagg_backend("tree"):
+        ref = AGGREGATORS[name](c, cfg)
+    got = sharded_aggregate(c, cfg, MESH(), reduction="split")
+    _assert_trees_equal(ref, got)
+
+
+def test_cohort_smaller_than_mesh():
+    """m=3 over an 8-way mesh: pad_to(8) fills whole shards with
+    replicated finite rows whose zero weights make them exact no-ops."""
+    cfg = FLConfig(aggregator="flsimco")
+    c = _cohort(jax.random.PRNGKey(2), n=2, m=3)
+    ref = AGGREGATORS["flsimco"](c, cfg)
+    for reduction in ("gather", "split"):
+        got = sharded_aggregate(c, cfg, MESH(), reduction=reduction)
+        _assert_trees_equal(ref, got)
+
+
+def test_all_invalid_shard():
+    """n=2 of m=8: devices past the valid prefix hold ONLY padding —
+    their shard contributes exact +0.0 and the result stays bitwise."""
+    cfg = FLConfig(aggregator="fedavg")
+    c = _cohort(jax.random.PRNGKey(3), n=2, m=8)
+    ref = AGGREGATORS["fedavg"](c, cfg)
+    got = sharded_aggregate(c, cfg, MESH())
+    _assert_trees_equal(ref, got)
+
+
+def test_sharded_cohort_sum_explicit_weights_and_errors():
+    c = _cohort(jax.random.PRNGKey(4), n=4, m=8)
+    w = jnp.array([0.4, 0.3, 0.2, 0.1])
+    ref = agg.cohort_weighted_sum(c, w)
+    _assert_trees_equal(ref, sharded_cohort_sum(c, w, MESH()))
+    with pytest.raises(ValueError, match="reduction"):
+        sharded_cohort_sum(c, w, MESH(), reduction="magic")
+
+
+def test_sharded_input_may_already_live_on_the_mesh():
+    """shard() then aggregate: device placement must not change values."""
+    cfg = FLConfig(aggregator="softmax")
+    c = _cohort(jax.random.PRNGKey(5), n=8, m=8)
+    ref = AGGREGATORS["softmax"](c, cfg)
+    sharded = c.shard(MESH())
+    got = sharded_aggregate(sharded, cfg, MESH())
+    _assert_trees_equal(ref, got)
+    back = sharded.gather()
+    _assert_trees_equal(c.trees, back.trees)
+    assert back.n == c.n
+
+
+# --------------------------------------------------------------------------
+# hierarchical (two-level Eq. 11) under the mesh
+# --------------------------------------------------------------------------
+
+def _hier_case(key, R=2, s=4):
+    trees = _stacked_trees(key, R * s)
+    blur = jax.random.uniform(jax.random.fold_in(key, 7), (R * s,),
+                              minval=10.0, maxval=20.0)
+    cohorts = []
+    for r in range(R):
+        sl = slice(r * s, (r + 1) * s)
+        cohorts.append(CohortBatch.from_stacked(
+            jax.tree.map(lambda x: x[sl], trees),
+            jnp.zeros((s,))).with_stats(blur=blur[sl]))
+    return trees, blur, cohorts
+
+
+@pytest.mark.parametrize("count_scaled", [True, False])
+def test_sharded_hierarchical_exact_bitwise(count_scaled):
+    trees, blur, cohorts = _hier_case(jax.random.PRNGKey(10))
+    ref = aggregate_hierarchical(cohorts, count_scaled=count_scaled)
+    got = sharded_hierarchical(trees, blur, MESH(), 2,
+                               count_scaled=count_scaled)
+    _assert_trees_equal(ref, got)
+
+
+def test_sharded_hierarchical_psum_float_close():
+    """The blocked two_stage_weighted_psum collective: one model per
+    device on the wire, reassociated row sums — float-close only."""
+    trees, blur, cohorts = _hier_case(jax.random.PRNGKey(11))
+    ref = aggregate_hierarchical(cohorts)
+    got = sharded_hierarchical(trees, blur, MESH(), 2, reduction="psum")
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_sharded_hierarchical_rejects_bad_shapes():
+    trees, blur, _ = _hier_case(jax.random.PRNGKey(12))
+    with pytest.raises(ValueError, match="divisible"):
+        sharded_hierarchical(trees, blur[:7], MESH(), 2)
+    with pytest.raises(ValueError, match="reduction"):
+        sharded_hierarchical(trees, blur, MESH(), 2, reduction="magic")
+
+
+# --------------------------------------------------------------------------
+# topology + client integration
+# --------------------------------------------------------------------------
+
+def _tiny_scenario(**over):
+    from repro.core.scenario import Scenario
+    rng = np.random.RandomState(0)
+    data = [rng.rand(6, 4, 4, 3).astype(np.float32) for _ in range(8)]
+    kw = dict(data=data, n_vehicles=8, vehicles_per_round=4, batch_size=2,
+              rounds=2, local_iters=1, lr=0.4, seed=11,
+              topology="multi", topology_kwargs={"n_rsus": 2})
+    kw.update(over)
+    return Scenario(**kw)
+
+
+def test_multi_rsu_auto_promotes_to_mesh():
+    """mesh_aggregate=None (the default) resolves a real multi-device
+    mesh whenever the cohort splits evenly — sharded by default."""
+    sc = _tiny_scenario()
+    mesh = sc.topology.resolve_mesh(sc.cfg)
+    assert mesh is not None and mesh.size > 1
+    assert dict(mesh.shape) == {"pod": 2, "data": 2}
+    # uneven cohorts fall back to host silently under auto...
+    sc_odd = _tiny_scenario(vehicles_per_round=3)
+    assert sc_odd.topology.resolve_mesh(sc_odd.cfg) is None
+    # ...and raise actionably when the mesh is forced
+    from repro.core.topology import MultiRSU
+    with pytest.raises(ValueError, match="mesh_aggregate"):
+        MultiRSU(n_rsus=2, mesh_aggregate=True).resolve_mesh(
+            sc_odd.cfg)
+
+
+def test_sequential_mesh_round_bitwise_vs_host():
+    """parallel=False + mesh: client execution is the sequential host
+    reference, only the aggregation shards — the whole round is bitwise
+    with the host path ("exact" reduction is a reordering-free gather)."""
+    from repro.core.scenario import run
+    from repro.core.topology import MultiRSU
+    sc_mesh = _tiny_scenario()
+    sc_host = _tiny_scenario(
+        topology=MultiRSU(n_rsus=2, mesh_aggregate=False),
+        topology_kwargs=None)
+    st_m, h_m = run(sc_mesh, rounds=1, parallel=False)
+    st_h, h_h = run(sc_host, rounds=1, parallel=False)
+    _assert_trees_equal(st_m.global_tree, st_h.global_tree)
+    assert h_m[0]["loss"] == h_h[0]["loss"]
+
+
+def test_parallel_sharded_round_deterministic_and_close():
+    """The fully sharded round (client blocks + reduction under
+    shard_map): bitwise-deterministic within the mode, float-close
+    versus the host path (different vmap width — documented, PR-6
+    style)."""
+    from repro.core.scenario import run
+    from repro.core.topology import MultiRSU
+    sc = _tiny_scenario()
+    st1, h1 = run(sc, rounds=2)
+    st2, h2 = run(sc, rounds=2)
+    _assert_trees_equal(st1.global_tree, st2.global_tree)
+    assert [r["loss"] for r in h1] == [r["loss"] for r in h2]
+    sc_host = _tiny_scenario(
+        topology=MultiRSU(n_rsus=2, mesh_aggregate=False),
+        topology_kwargs=None)
+    st_h, h_h = run(sc_host, rounds=1)
+    st_m, h_m = run(sc, rounds=1)
+    for a, b in zip(jax.tree.leaves(st_m.global_tree),
+                    jax.tree.leaves(st_h.global_tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=1e-4)
+    # schedule (everything but the loss) is bitwise-shared
+    assert {k: v for k, v in h_m[0].items() if k != "loss"} == \
+        {k: v for k, v in h_h[0].items() if k != "loss"}
+
+
+def test_run_cohort_mesh_shapes_and_prefix():
+    """run_cohort(mesh=...) pads to the mesh extent but keeps the
+    valid-prefix contract: n stays the true cohort size."""
+    from repro.core.clients import CLIENT_UPDATES
+    sc = _tiny_scenario()
+    state = sc.init_state()
+    rng = np.random.RandomState(1)
+    batches = jnp.asarray(rng.rand(3, 2, 4, 4, 3).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    cohort, _ = CLIENT_UPDATES["dtssl"].run_cohort(
+        sc.cfg, state.global_tree, None, batches, keys, 0.1,
+        mesh=MESH())
+    assert cohort.n == 3
+    assert cohort.size == 8          # padded to the mesh extent
+    assert bool(jnp.all(jnp.isfinite(cohort.valid_losses)))
+
+
+def test_handover_mesh_shard_runs_with_device_side_regrouping():
+    """HandoverMultiRSU(mesh_shard=True): download groups run sharded,
+    uploads stay `CohortBatch.take` gathers — rounds complete with
+    finite losses and per-RSU regrouping intact."""
+    from repro.core.scenario import run
+    sc = _tiny_scenario(
+        topology="handover",
+        topology_kwargs={"n_rsus": 2, "rsu_range": 200.0,
+                         "round_duration": 50.0, "sync_every": 2,
+                         "mesh_shard": True})
+    st, hist = run(sc, rounds=2)
+    assert all(np.isfinite(r["loss"]) for r in hist)
+    assert sum(hist[0]["rsu_sizes"]) == sc.cfg.vehicles_per_round
+
+
+def test_maybe_cohort_mesh_resolution():
+    assert maybe_cohort_mesh(2, 4) is not None
+    # largest divisor of rows_per_pod=4 with pod*data <= 8 devices
+    assert dict(maybe_cohort_mesh(2, 4).shape) == {"pod": 2, "data": 4}
+    # caching: the same shape is the same mesh object
+    assert cohort_mesh(2, 4) is cohort_mesh(2, 4)
+    # more pods than devices -> no mesh under auto
+    assert maybe_cohort_mesh(16, 4) is None

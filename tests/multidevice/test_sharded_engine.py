@@ -1,0 +1,92 @@
+"""Sharded `run_campaign`: the compiled path and the sharded path
+compose (forced 8-CPU devices).
+
+Mirrors tests/test_engine.py for the MultiRSU-on-mesh round body:
+
+  * trace counts stay pinned — jit_round <= 1 program per campaign,
+    scan <= 2 (the chunk body + remainder) — shard_map inlines into the
+    jitted round instead of adding programs;
+  * checkpoint save/restore at a chunk boundary replays the campaign
+    BIT for bit within the sharded mode;
+  * the schedule (every record field but the loss) is bitwise-identical
+    to the eager sharded loop.
+"""
+import functools
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import compile_counts, run_campaign
+from repro.core.scenario import Scenario, run
+
+
+def _scenario(**over):
+    rng = np.random.RandomState(0)
+    data = [rng.rand(6, 4, 4, 3).astype(np.float32) for _ in range(8)]
+    kw = dict(data=data, n_vehicles=8, vehicles_per_round=4, batch_size=2,
+              rounds=4, local_iters=1, lr=0.4, seed=11,
+              topology="multi", topology_kwargs={"n_rsus": 2})
+    kw.update(over)
+    return Scenario(**kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit4():
+    sc = _scenario()
+    assert sc.topology.resolve_mesh(sc.cfg) is not None  # really sharded
+    return sc, run_campaign(sc, rounds=4, mode="jit")
+
+
+def _assert_states_identical(s1, s2):
+    l1, l2 = jax.tree.leaves(s1.to_tree()), jax.tree.leaves(s2.to_tree())
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert s1.round == s2.round
+
+
+def test_sharded_campaign_trace_counts():
+    sc, (st, hist) = _jit4()
+    assert len(hist) == 4
+    assert all(np.isfinite(r["loss"]) for r in hist)
+    assert compile_counts(sc)["jit_round"] <= 1
+
+
+def test_sharded_campaign_schedule_matches_eager_sharded():
+    sc, (st, hist) = _jit4()
+    st_e, hist_e = run(_scenario(), rounds=4)
+    sans = lambda r: {k: v for k, v in r.items() if k != "loss"}
+    assert [sans(r) for r in hist] == [sans(r) for r in hist_e]
+    np.testing.assert_array_equal(np.asarray(st.key), np.asarray(st_e.key))
+
+
+def test_sharded_checkpoint_resume_bit_exact(tmp_path):
+    """Save at round 2, restore, run 2 more: bitwise with the
+    uninterrupted sharded campaign (trees, losses, full FLState)."""
+    from repro.checkpoint.store import restore_state
+    sc, (st4, hist4) = _jit4()
+    sc2 = _scenario()
+    st_ck, hist_ck = run_campaign(sc2, rounds=4, mode="jit",
+                                  checkpoint_every=2,
+                                  checkpoint_dir=str(tmp_path))
+    _assert_states_identical(st4, st_ck)
+    assert hist_ck == hist4
+    restored = restore_state(os.path.join(tmp_path, "round_000002"), sc2)
+    assert restored.round == 2
+    st_b, hist_b = run_campaign(sc2, restored, rounds=2, mode="jit")
+    _assert_states_identical(st4, st_b)
+    assert hist_ck[:2] + hist_b == hist4
+    assert compile_counts(sc2)["jit_round"] <= 1
+
+
+@pytest.mark.parametrize("mode", ["scan"])
+def test_sharded_scan_chunks_compose(mode):
+    sc = _scenario()
+    st4, hist4 = run_campaign(sc, rounds=4, mode=mode)
+    st_a, hist_a = run_campaign(sc, rounds=2, mode=mode)
+    st_b, hist_b = run_campaign(sc, st_a, rounds=2, mode=mode)
+    _assert_states_identical(st4, st_b)
+    assert hist_a + hist_b == hist4
+    assert compile_counts(sc)["scan"] <= 2

@@ -143,3 +143,55 @@ def test_cohort_is_a_pytree():
     assert isinstance(fetched, CohortBatch)
     assert fetched.n == 3
     assert isinstance(fetched.losses, np.ndarray)
+
+
+@pytest.mark.parametrize("name", sorted(AGGREGATORS))
+def test_pad_to_aggregation_bit_exact(name):
+    """pad_to re-padding (the shard() pre-step) is invisible to every
+    masked aggregation, exactly like the original bucket padding."""
+    key = jax.random.PRNGKey(6)
+    cfg = FLConfig(aggregator=name)
+    c = _cohort(key, n=3, m=4, blur=BLUR)
+    out = AGGREGATORS[name](c, cfg)
+    out_p = AGGREGATORS[name](c.pad_to(16), cfg)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(out_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pad_to_replicates_last_row_and_keeps_mask():
+    key = jax.random.PRNGKey(7)
+    c = _cohort(key, n=2, m=4, blur=jnp.array([11.0, 13.0]))
+    p = c.pad_to(8)
+    assert p.n == 2 and p.size == 8
+    np.testing.assert_array_equal(np.asarray(p.mask),
+                                  [1, 1, 0, 0, 0, 0, 0, 0])
+    # new rows replicate row m-1 of every leaf (finite, no RNG)
+    for leaf in jax.tree.leaves(p.trees):
+        for i in range(4, 8):
+            np.testing.assert_array_equal(np.asarray(leaf[i]),
+                                          np.asarray(leaf[3]))
+    np.testing.assert_array_equal(np.asarray(p.blur[4:]),
+                                  np.full(4, np.asarray(c.blur[3])))
+    # valid views are untouched
+    np.testing.assert_array_equal(np.asarray(p.valid_losses),
+                                  np.asarray(c.valid_losses))
+    with pytest.raises(ValueError, match="smaller"):
+        p.pad_to(4)
+    assert p.pad_to(8) is p  # no-op fast path
+
+
+def test_shard_gather_roundtrip_single_device():
+    """shard()/gather() on the trivial one-device mesh: values bitwise
+    untouched, size padded to a multiple of the mesh extent. (Real
+    multi-device placement is covered in tests/multidevice/.)"""
+    from repro.launch.mesh import cohort_mesh
+    key = jax.random.PRNGKey(8)
+    c = _cohort(key, n=3, m=4, blur=BLUR)
+    mesh = cohort_mesh(1, 1)
+    s = c.shard(mesh)
+    assert s.size == 4 and s.n == 3
+    spec = CohortBatch.sharding_spec(mesh)
+    assert s.losses.sharding.is_equivalent_to(spec, s.losses.ndim)
+    g = s.gather()
+    for a, b in zip(jax.tree.leaves(c), jax.tree.leaves(g)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,97 @@
+"""Property tests for `CohortBatch` padding/masking invariants (tier-1).
+
+Hypothesis-driven extension of the deterministic padded-vs-unpadded
+suite in tests/test_cohort.py: random valid counts, padded sizes and
+schemes, always the same invariant — padding is invisible to every
+masked aggregation, `pad_to` composes, and the valid views never see a
+padding row. hypothesis is a dev-only dependency (requirements-dev.txt);
+the module skips when absent, like tests/test_aggregation.py. The
+sharded counterparts (same invariants under a real mesh) live in
+tests/multidevice/test_sharded_properties.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aggregation import AGGREGATORS
+from repro.core.cohort import CohortBatch, bucket_size
+from repro.core.state import FLConfig
+
+SETTINGS = settings(max_examples=40, deadline=None)
+
+
+def _cohort(seed, n, m):
+    key = jax.random.PRNGKey(seed)
+    trees = {"a": jax.random.normal(key, (m, 3, 2)),
+             "b": jax.random.normal(jax.random.fold_in(key, 1), (m, 5))}
+    blur = jax.random.uniform(jax.random.fold_in(key, 2), (n,),
+                              minval=10.0, maxval=20.0)
+    blur_pad = jnp.concatenate([blur, jnp.full((m - n,), 99.0)])
+    losses = jax.random.uniform(jax.random.fold_in(key, 3), (m,))
+    return CohortBatch.from_stacked(trees, losses, n=n, blur=blur_pad)
+
+
+def _assert_trees_equal(t1, t2):
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 10),
+       pad=st.integers(0, 8),
+       scheme=st.sampled_from(sorted(AGGREGATORS)))
+def test_padding_is_invisible_to_every_scheme(seed, n, pad, scheme):
+    c = _cohort(seed, n, n + pad)
+    unpadded = CohortBatch.from_stacked(c.valid_trees, c.valid_losses,
+                                        n=n, blur=c.valid_blur)
+    cfg = FLConfig(aggregator=scheme)
+    _assert_trees_equal(AGGREGATORS[scheme](c, cfg),
+                        AGGREGATORS[scheme](unpadded, cfg))
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 8),
+       extra1=st.integers(0, 5), extra2=st.integers(0, 5))
+def test_pad_to_composes_and_preserves_views(seed, n, extra1, extra2):
+    """pad_to(a).pad_to(a+b) == pad_to(a+b) on every observable: valid
+    views, masks, and any masked weighted sum."""
+    c = _cohort(seed, n, n)
+    once = c.pad_to(n + extra1 + extra2)
+    twice = c.pad_to(n + extra1).pad_to(n + extra1 + extra2)
+    assert once.n == twice.n == n
+    np.testing.assert_array_equal(np.asarray(once.mask),
+                                  np.asarray(twice.mask))
+    _assert_trees_equal(once.valid_trees, twice.valid_trees)
+    np.testing.assert_array_equal(np.asarray(once.valid_losses),
+                                  np.asarray(twice.valid_losses))
+    cfg = FLConfig(aggregator="flsimco")
+    _assert_trees_equal(AGGREGATORS["flsimco"](once, cfg),
+                        AGGREGATORS["flsimco"](twice, cfg))
+    with pytest.raises(ValueError, match="smaller"):
+        once.pad_to(once.size - 1)
+
+
+@SETTINGS
+@given(n=st.integers(1, 4096))
+def test_bucket_size_is_minimal_power_of_two(n):
+    b = bucket_size(n)
+    assert b >= n and (b & (b - 1)) == 0
+    assert b == 1 or b // 2 < n
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 8),
+       pad=st.integers(1, 6))
+def test_padded_weights_zero_exactly_the_padding(seed, n, pad):
+    c = _cohort(seed, n, n + pad)
+    w = jax.random.uniform(jax.random.PRNGKey(seed + 1), (n,))
+    padded = c.padded_weights(w)
+    np.testing.assert_array_equal(np.asarray(padded[:n]), np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(padded[n:]),
+                                  np.zeros(pad, np.float32))
