@@ -58,14 +58,23 @@ def time_rounds(scenario, n_rounds, parallel=True):
     return (time.perf_counter() - t0) / n_rounds * 1e6
 
 
-def _time_agg(fn, repeats):
+def _time_agg(fn, repeats, what="agg"):
+    from repro.analysis.guards import assert_compile_bounds, track_compiles
+
     out = fn()                                            # warmup/compile
     jax.block_until_ready(jax.tree.leaves(out)[0])
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        out = fn()
-        jax.block_until_ready(jax.tree.leaves(out)[0])
-    return (time.perf_counter() - t0) / repeats * 1e6, out
+    # the timed window is steady state by contract: the warmup call above
+    # compiled everything, so zero backend compiles may land inside it —
+    # pinned through the shared guards tracker, same rail as the engine
+    with track_compiles() as tracker:
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn()
+            jax.block_until_ready(jax.tree.leaves(out)[0])
+        dt = time.perf_counter() - t0
+    assert_compile_bounds({"steady_state": tracker.backend_compiles},
+                          {"steady_state": 0}, what=f"multi_rsu/{what}")
+    return dt / repeats * 1e6, out
 
 
 def _fleet_cohort(m, seed=0):
@@ -118,14 +127,16 @@ def run_sharded(args, results):
         tag = f"V={m};mesh={dict(mesh.shape)}"
 
         us_host, ref = _time_agg(
-            lambda: AGGREGATORS["flsimco"](c, cfg), repeats)
+            lambda: AGGREGATORS["flsimco"](c, cfg), repeats,
+            what=f"host_reference/agg@V={m}")
         emit("sharded/host_reference/agg", us_host, tag)
         results[f"host_v{m}"] = us_host
 
         for reduction in ("gather", "split"):
             us, got = _time_agg(
                 lambda r=reduction: sharded_aggregate(c, cfg, mesh,
-                                                      reduction=r), repeats)
+                                                      reduction=r), repeats,
+                what=f"{reduction}/agg@V={m}")
             _assert_bitwise(ref, got, f"{reduction} @ V={m}")
             emit(f"sharded/{reduction}/agg", us, tag)
             results[f"{reduction}_v{m}"] = us
@@ -140,12 +151,13 @@ def run_sharded(args, results):
             blur=blur[r * (m // 2):(r + 1) * (m // 2)])
             for r in range(n_rsus)]
         us_h, ref_h = _time_agg(
-            lambda: aggregate_hierarchical(cohorts), repeats)
+            lambda: aggregate_hierarchical(cohorts), repeats,
+            what=f"host_reference/hier@V={m}")
         emit("sharded/host_reference/hier", us_h, tag)
         results[f"hier_host_v{m}"] = us_h
         us_s, got_h = _time_agg(
             lambda: sharded_hierarchical(c.trees, blur, mesh, n_rsus),
-            repeats)
+            repeats, what=f"mesh_exact/hier@V={m}")
         _assert_bitwise(ref_h, got_h, f"hierarchical @ V={m}")
         emit("sharded/mesh_exact/hier", us_s, tag)
         results[f"hier_mesh_v{m}"] = us_s

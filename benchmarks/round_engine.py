@@ -227,11 +227,11 @@ def main():
                 emit(f"round_engine/{name}/{key}", us, f"V={V};R={args.rsus}")
                 sys.stdout.flush()
             counts = compile_counts(sc)
-            # the campaign contract: ONE fused round program, one scan
-            # program per distinct chunk length (2 here: the warmup
-            # chunk of 1 + the timed chunk of --rounds)
-            assert counts["jit_round"] <= 1, counts
-            assert counts["scan"] <= 2, counts
+            # the campaign contract (jit_round <= 1, scan <= 2) lives in
+            # analysis.guards.ENGINE_COMPILE_BOUNDS — one home, shared
+            # with the engine tests
+            from repro.analysis.guards import assert_compile_bounds
+            assert_compile_bounds(counts, what=f"round_engine/{name}")
             entry["engine_compiles"] = counts
             entry["engine_within_compile_bound"] = True
             entry["speedup_jit_vs_cohort"] = (

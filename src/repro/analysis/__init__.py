@@ -1,0 +1,43 @@
+"""`repro.analysis` — trace hygiene as a tool, not a code-review habit.
+
+This repo's own history is the motivation (ISSUE 8): PR 4 removed
+per-client ``float(loss)`` syncs, PR 7 fixed a fresh-mesh-per-round
+retrace bug, PR 6 hand-pinned ``jit_round <= 1`` inside one benchmark.
+Every one of those regressions is mechanically detectable, so this
+package detects them mechanically — statically and in CI, before they
+ship:
+
+  lint       AST linter over src/benchmarks/examples. Rule classes are
+             mined from the real past bugs: host syncs in round/engine
+             hot paths, retrace hazards (mesh/jit construction per
+             round, fresh device constants per call), and purity
+             violations (module-global mutation, RNG outside the packed
+             RandomState / key-tree discipline). Findings carry
+             file:line, rule id and a fix hint; `analysis/baseline.json`
+             pins the accepted pre-existing set so CI fails only on NEW
+             findings. `# analysis: sanctioned-sync -- reason` marks the
+             once-per-round fetch points the design allows.
+
+  contracts  Abstract (jax.eval_shape) interpretation of every
+             AGGREGATORS / SCHEME_WEIGHTS / CLIENT_UPDATES / TOPOLOGIES
+             registry entry against the declared pytree/shape/dtype/mask
+             contracts — a new scheme is structurally validated at test
+             time, not at round 50 of a campaign.
+
+  guards     Runtime rails shared by the engine, tests and benchmarks:
+             `no_implicit_transfers()` (jax.transfer_guard) around the
+             fused round body, and `track_compiles()` /
+             `assert_compile_bounds()` so the `jit_round <= 1` /
+             `scan <= 2` campaign contract lives in exactly one place
+             (`ENGINE_COMPILE_BOUNDS`).
+
+Run the static layers from the repo root:
+
+    python -m repro.analysis.lint src/ benchmarks/ examples/
+    python -m repro.analysis.contracts
+
+Import-light on purpose: `lint` is pure stdlib (usable without jax
+installed), so submodules are imported explicitly, never from here.
+"""
+__all__ = ["contracts", "guards", "lint"]
+

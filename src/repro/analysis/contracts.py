@@ -1,0 +1,335 @@
+"""Abstract registry contract checker (``jax.eval_shape``, no FLOPs).
+
+Every registry the experiment layer dispatches through has a structural
+contract the rest of the stack assumes:
+
+  SCHEME_WEIGHTS   (cohort, cfg) -> (n,) float weights over the VALID
+                   rows only. A scheme that reads ``cohort.blur``
+                   instead of ``cohort.valid_blur`` returns (m,) on a
+                   padded cohort — the exact bug the valid-prefix
+                   convention exists to prevent.
+  AGGREGATORS      (cohort, cfg) -> pytree with the model tree's exact
+                   structure, leaf shapes and dtypes (the new global
+                   model), identical whatever the padding m >= n.
+  CLIENT_UPDATES   run_cohort returns (CohortBatch, uploads) where the
+                   CohortBatch carries the validity mask, per-row model
+                   trees stacked over the cohort axis, and the same
+                   valid count it was given.
+  TOPOLOGIES       default-constructible strategy classes exposing the
+                   Topology API with a JSON-able ``signature()``.
+
+All checks interpret the registry entries abstractly — a ShapeDtypeStruct
+cohort over a ShapeDtypeStruct resnet tree — so a broken scheme is
+caught in milliseconds at test time, not at round 50 of a campaign.
+
+Run from the repo root (CI's `analysis` job does)::
+
+    python -m repro.analysis.contracts
+
+Registries are injectable (``check_all(aggregators=..., ...)``) so
+tests/test_analysis.py can verify the checker flags deliberately broken
+entries with the right rule id.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import aggregation as agg
+from ..core import clients as clients_mod
+from ..core import topology as topo_mod
+from ..core.cohort import CohortBatch
+from ..core.state import FLConfig
+from ..configs.base import get_config
+from ..models.resnet import init_resnet
+
+__all__ = [
+    "Violation",
+    "check_aggregators",
+    "check_all",
+    "check_client_updates",
+    "check_scheme_weights",
+    "check_topologies",
+    "main",
+]
+
+# Rule ids (the analysis-wide namespace also holds the lint rules).
+RULE_TREEDEF = "contract-treedef"
+RULE_MASK = "contract-mask"
+RULE_WEIGHT_SHAPE = "contract-weight-shape"
+RULE_WEIGHT_DTYPE = "contract-weight-dtype"
+RULE_TOPOLOGY_API = "contract-topology-api"
+RULE_EVAL_ERROR = "contract-eval-error"
+
+
+@dataclass(frozen=True)
+class Violation:
+    registry: str
+    entry: str
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.registry}[{self.entry}]: {self.rule}: {self.message}"
+
+
+# --------------------------------------------------------------------------
+# abstract fixtures
+# --------------------------------------------------------------------------
+
+def _check_cfg(**over) -> FLConfig:
+    """Tiny config: shapes only matter structurally under eval_shape."""
+    base = dict(n_vehicles=8, vehicles_per_round=3, batch_size=2,
+                local_iters=1, queue_len=16, feature_dim=128)
+    base.update(over)
+    return FLConfig(**base)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def model_tree_sds(arch: str = "resnet18-cifar"):
+    """The model tree's shape/dtype skeleton, without allocating it."""
+    model_cfg = get_config(arch)
+    return jax.eval_shape(lambda k: init_resnet(model_cfg, k),
+                          _sds((2,), jnp.uint32))
+
+
+def abstract_cohort(tree_sds, n: int, m: int) -> CohortBatch:
+    """A CohortBatch of ShapeDtypeStructs: n valid rows padded to m."""
+    if not 1 <= n <= m:
+        raise ValueError(f"valid count {n} not in [1, {m}]")
+    stacked = jax.tree.map(lambda l: _sds((m,) + tuple(l.shape), l.dtype),
+                           tree_sds)
+    vec = _sds((m,), jnp.float32)
+    return CohortBatch(trees=stacked, losses=vec, mask=vec, n=n,
+                       velocities=vec, blur=vec)
+
+
+def _leaf_paths(tree) -> Dict[str, jax.ShapeDtypeStruct]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def _diff_trees(expected, got) -> Optional[str]:
+    """First structural difference between two SDS pytrees, or None."""
+    es = jax.tree_util.tree_structure(expected)
+    gs = jax.tree_util.tree_structure(got)
+    if es != gs:
+        return f"treedef mismatch: expected {es}, got {gs}"
+    exp, act = _leaf_paths(expected), _leaf_paths(got)
+    for path, leaf in exp.items():
+        other = act[path]
+        if tuple(other.shape) != tuple(leaf.shape):
+            return (f"leaf {path or '<root>'} shape {tuple(other.shape)} "
+                    f"!= expected {tuple(leaf.shape)}")
+        if other.dtype != leaf.dtype:
+            return (f"leaf {path or '<root>'} dtype {other.dtype} "
+                    f"!= expected {leaf.dtype}")
+    return None
+
+
+# --------------------------------------------------------------------------
+# per-registry checks
+# --------------------------------------------------------------------------
+
+# (n, m) cohort geometries every entry is interpreted under: the unpadded
+# cohort and a bucketed one. Schemes/aggregators must be invariant to m.
+_GEOMETRIES = ((3, 3), (3, 5))
+
+
+def check_scheme_weights(schemes: Optional[Mapping] = None,
+                         cfg: Optional[FLConfig] = None) -> List[Violation]:
+    schemes = agg.SCHEME_WEIGHTS if schemes is None else schemes
+    cfg = cfg or _check_cfg()
+    tree = model_tree_sds()
+    out: List[Violation] = []
+    for name, fn in sorted(schemes.items()):
+        for n, m in _GEOMETRIES:
+            cohort = abstract_cohort(tree, n, m)
+            try:
+                w = jax.eval_shape(lambda c: fn(c, cfg), cohort)
+            except Exception as e:  # noqa: BLE001 - report, don't crash
+                out.append(Violation("SCHEME_WEIGHTS", name, RULE_EVAL_ERROR,
+                                     f"raised under eval_shape at "
+                                     f"(n={n}, m={m}): {e!r}"))
+                break
+            if tuple(w.shape) != (n,):
+                hint = (" — weights computed on the padded rows; use "
+                        "cohort.valid_blur / the valid-prefix views"
+                        if tuple(w.shape) == (m,) and m != n else "")
+                out.append(Violation(
+                    "SCHEME_WEIGHTS", name, RULE_WEIGHT_SHAPE,
+                    f"weights shape {tuple(w.shape)} != ({n},) at "
+                    f"(n={n}, m={m}){hint}"))
+                break
+            if not jnp.issubdtype(w.dtype, jnp.floating):
+                out.append(Violation(
+                    "SCHEME_WEIGHTS", name, RULE_WEIGHT_DTYPE,
+                    f"weights dtype {w.dtype} is not floating "
+                    f"(aggregation multiplies f32 model leaves)"))
+                break
+    return out
+
+
+def check_aggregators(aggregators: Optional[Mapping] = None,
+                      cfg: Optional[FLConfig] = None) -> List[Violation]:
+    aggregators = agg.AGGREGATORS if aggregators is None else aggregators
+    cfg = cfg or _check_cfg()
+    tree = model_tree_sds()
+    out: List[Violation] = []
+    for name, fn in sorted(aggregators.items()):
+        for n, m in _GEOMETRIES:
+            cohort = abstract_cohort(tree, n, m)
+            try:
+                result = jax.eval_shape(lambda c: fn(c, cfg), cohort)
+            except Exception as e:  # noqa: BLE001
+                out.append(Violation("AGGREGATORS", name, RULE_EVAL_ERROR,
+                                     f"raised under eval_shape at "
+                                     f"(n={n}, m={m}): {e!r}"))
+                break
+            diff = _diff_trees(tree, result)
+            if diff is not None:
+                out.append(Violation(
+                    "AGGREGATORS", name, RULE_TREEDEF,
+                    f"output is not the model tree at (n={n}, m={m}): "
+                    f"{diff}"))
+                break
+    return out
+
+
+def _check_one_client(name: str, entry, cfg: FLConfig, tree) -> List[Violation]:
+    n = cfg.vehicles_per_round
+    batches = _sds((n, cfg.batch_size, 4, 4, 3))
+    keys = _sds((n, 2), jnp.uint32)
+    lr = _sds(())
+
+    def bad(rule, msg):
+        return Violation("CLIENT_UPDATES", name, rule, msg)
+
+    try:
+        state = jax.eval_shape(lambda t: entry.init_state(cfg, t), tree)
+        cohort, _uploads = jax.eval_shape(
+            lambda t, cs, b, k, l: entry.run_cohort(cfg, t, cs, b, k, l,
+                                                    parallel=True),
+            tree, state, batches, keys, lr)
+    except Exception as e:  # noqa: BLE001
+        return [bad(RULE_EVAL_ERROR, f"raised under eval_shape: {e!r}")]
+
+    if not isinstance(cohort, CohortBatch):
+        return [bad(RULE_MASK,
+                    f"run_cohort returned {type(cohort).__name__}, not a "
+                    f"CohortBatch — the validity mask was dropped")]
+    out: List[Violation] = []
+    m = tuple(cohort.losses.shape)[0] if cohort.losses.ndim else 0
+    if cohort.mask is None:
+        out.append(bad(RULE_MASK, "CohortBatch.mask is None"))
+    else:
+        if tuple(cohort.mask.shape) != (m,):
+            out.append(bad(RULE_MASK,
+                           f"mask shape {tuple(cohort.mask.shape)} != "
+                           f"losses' cohort axis ({m},)"))
+        if not jnp.issubdtype(cohort.mask.dtype, jnp.floating):
+            out.append(bad(RULE_MASK,
+                           f"mask dtype {cohort.mask.dtype} is not the "
+                           f"float32 validity convention"))
+    if cohort.n != n:
+        out.append(bad(RULE_MASK,
+                       f"valid count changed: ran {n} clients, "
+                       f"CohortBatch.n == {cohort.n}"))
+    expected = jax.tree.map(lambda l: _sds((m,) + tuple(l.shape), l.dtype),
+                            tree)
+    diff = _diff_trees(expected, cohort.trees)
+    if diff is not None:
+        out.append(bad(RULE_TREEDEF,
+                       f"stacked trees are not the model tree with a "
+                       f"leading cohort axis: {diff}"))
+    return out
+
+
+def check_client_updates(client_updates: Optional[Mapping] = None,
+                         cfg: Optional[FLConfig] = None) -> List[Violation]:
+    client_updates = (clients_mod.CLIENT_UPDATES if client_updates is None
+                      else client_updates)
+    out: List[Violation] = []
+    for name, entry in sorted(client_updates.items()):
+        entry_cfg = cfg or _check_cfg(client=name if name in
+                                      clients_mod.CLIENT_UPDATES else None)
+        tree = model_tree_sds()
+        out.extend(_check_one_client(name, entry, entry_cfg, tree))
+    return out
+
+
+def check_topologies(topologies: Optional[Mapping] = None) -> List[Violation]:
+    topologies = topo_mod.TOPOLOGIES if topologies is None else topologies
+    out: List[Violation] = []
+    for name, cls in sorted(topologies.items()):
+        def bad(rule, msg):
+            return Violation("TOPOLOGIES", name, rule, msg)
+        for method in ("init_state", "run_round", "signature", "validate"):
+            if not callable(getattr(cls, method, None)):
+                out.append(bad(RULE_TOPOLOGY_API,
+                               f"missing Topology API method {method!r}"))
+        try:
+            instance = cls()
+        except Exception as e:  # noqa: BLE001
+            out.append(bad(RULE_TOPOLOGY_API,
+                           f"not default-constructible: {e!r}"))
+            continue
+        if getattr(instance, "name", None) != name:
+            out.append(bad(RULE_TOPOLOGY_API,
+                           f"instance.name {getattr(instance, 'name', None)!r}"
+                           f" != registry key {name!r}"))
+        try:
+            sig = instance.signature()
+            json.dumps(sig)
+        except Exception as e:  # noqa: BLE001
+            out.append(bad(RULE_TOPOLOGY_API,
+                           f"signature() is not JSON-able: {e!r}"))
+            continue
+        if not isinstance(sig, dict) or sig.get("name") != name:
+            out.append(bad(RULE_TOPOLOGY_API,
+                           f"signature() must be a dict carrying "
+                           f"name={name!r}; got {sig!r}"))
+    return out
+
+
+def check_all(*, schemes: Optional[Mapping] = None,
+              aggregators: Optional[Mapping] = None,
+              client_updates: Optional[Mapping] = None,
+              topologies: Optional[Mapping] = None) -> List[Violation]:
+    """Check every registry (real ones by default, injectable for tests)."""
+    out: List[Violation] = []
+    out.extend(check_scheme_weights(schemes))
+    out.extend(check_aggregators(aggregators))
+    out.extend(check_client_updates(client_updates))
+    out.extend(check_topologies(topologies))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    violations = check_all()
+    for v in violations:
+        print(str(v), file=sys.stderr)
+    n_entries = (len(agg.SCHEME_WEIGHTS) + len(agg.AGGREGATORS)
+                 + len(clients_mod.CLIENT_UPDATES) + len(topo_mod.TOPOLOGIES))
+    if violations:
+        print(f"contracts: {len(violations)} violation(s) across "
+              f"{n_entries} registry entries", file=sys.stderr)
+        return 1
+    print(f"contracts: {n_entries} registry entries OK "
+          f"(SCHEME_WEIGHTS={len(agg.SCHEME_WEIGHTS)}, "
+          f"AGGREGATORS={len(agg.AGGREGATORS)}, "
+          f"CLIENT_UPDATES={len(clients_mod.CLIENT_UPDATES)}, "
+          f"TOPOLOGIES={len(topo_mod.TOPOLOGIES)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,170 @@
+"""Runtime guard rails shared by the engine, tests, and benchmarks.
+
+Two rails, each previously enforced ad hoc (or not at all):
+
+``no_implicit_transfers()``
+    ``jax.transfer_guard("disallow")`` as a context manager. Inside it,
+    any *implicit* host<->device transfer raises — a numpy array leaking
+    into a jitted round body, a Python scalar uploaded mid-round, a
+    traced value silently fetched by ``float()``. Explicit
+    ``jax.device_get`` / ``jax.device_put`` stay allowed, which is
+    exactly the repo's sanctioned-sync discipline: fetches are fine
+    when they are deliberate and once per round/chunk. Note the guard
+    is strict by design: even ``jnp.ones(3)`` trips it (the fill
+    constant is an implicit upload), so warm/compile *outside* the
+    guard and wrap only the steady-state dispatch of device-resident
+    inputs — ``core.engine.run_campaign(transfer_guard=True)`` does
+    this for the fused round body.
+
+``track_compiles()`` / ``assert_compile_bounds()``
+    A compile-count tracker backed by ``jax.monitoring``'s
+    ``/jax/core/compile/backend_compile_duration`` event (one firing
+    per XLA backend compile), with the engine's own trace counters
+    layered on top. The ``jit_round <= 1`` / ``scan <= 2`` campaign
+    contract from PR 6 lives here (``ENGINE_COMPILE_BOUNDS``) and
+    nowhere else; ``benchmarks/round_engine.py`` and the engine tests
+    import it instead of hand-pinning integers.
+
+jax.monitoring has no public listener deregistration, so this module
+registers ONE process-wide listener at first use and dispatches to
+whichever trackers are currently active (re-entrant; trackers nest).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, Mapping, Optional
+
+import jax
+
+__all__ = [
+    "ENGINE_COMPILE_BOUNDS",
+    "CompileTracker",
+    "GuardViolation",
+    "assert_compile_bounds",
+    "no_implicit_transfers",
+    "track_compiles",
+]
+
+# The one home of the campaign-compilation contract (PR 6): a campaign
+# traces the fused round body at most once per execution mode — one
+# python-looped jit OR up to two scan programs (trailing chunk shorter
+# than chunk length triggers the second trace).
+ENGINE_COMPILE_BOUNDS: Dict[str, int] = {"jit_round": 1, "scan": 2}
+
+# jax.monitoring event recorded once per XLA backend compile
+# (jax 0.4.x; verified against this container's jaxlib).
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class GuardViolation(AssertionError):
+    """A runtime guard-rail contract was violated."""
+
+
+@dataclass
+class CompileTracker:
+    """Counts XLA backend compiles observed while active.
+
+    ``backend_compiles`` is the raw number of backend_compile events
+    seen between ``__enter__`` and ``__exit__`` (or since the last
+    ``reset()``). Use via :func:`track_compiles`.
+    """
+
+    backend_compiles: int = 0
+    _active: bool = field(default=False, repr=False)
+
+    def reset(self) -> None:
+        self.backend_compiles = 0
+
+    def _record(self) -> None:
+        if self._active:
+            self.backend_compiles += 1
+
+
+_LOCK = threading.Lock()
+_TRACKERS: list = []
+_LISTENER_REGISTERED = False
+
+
+def _dispatch(event: str, duration: float, **kwargs) -> None:
+    if event != _COMPILE_EVENT:
+        return
+    with _LOCK:
+        active = list(_TRACKERS)
+    for tracker in active:
+        tracker._record()
+
+
+def _ensure_listener() -> None:
+    # analysis: allow=purity-global-mutation -- jax.monitoring has no
+    # unregister; one process-wide listener, registered exactly once
+    global _LISTENER_REGISTERED
+    with _LOCK:
+        if _LISTENER_REGISTERED:
+            return
+        jax.monitoring.register_event_duration_secs_listener(_dispatch)
+        _LISTENER_REGISTERED = True
+
+
+@contextlib.contextmanager
+def track_compiles() -> Iterator[CompileTracker]:
+    """Count XLA backend compiles inside the ``with`` block.
+
+    >>> with track_compiles() as tracker:
+    ...     fn(x)  # warmed already?
+    >>> assert tracker.backend_compiles == 0
+    """
+    _ensure_listener()
+    tracker = CompileTracker()
+    tracker._active = True
+    with _LOCK:
+        _TRACKERS.append(tracker)
+    try:
+        yield tracker
+    finally:
+        tracker._active = False
+        with _LOCK:
+            _TRACKERS.remove(tracker)
+
+
+@contextlib.contextmanager
+def no_implicit_transfers() -> Iterator[None]:
+    """Raise on any implicit host<->device transfer in the block.
+
+    Wraps ``jax.transfer_guard("disallow")``; explicit
+    ``jax.device_get`` / ``jax.device_put`` remain allowed. Compile
+    outside the guard — constant uploads during lowering trip it.
+    """
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+def assert_compile_bounds(
+    counts: Mapping[str, int],
+    bounds: Optional[Mapping[str, int]] = None,
+    *,
+    what: str = "campaign",
+) -> None:
+    """Assert every counter in ``counts`` is within ``bounds``.
+
+    ``bounds`` defaults to :data:`ENGINE_COMPILE_BOUNDS`. Counters in
+    ``counts`` with no declared bound are ignored, so callers can pass
+    ``core.engine.compile_counts(scenario)`` verbatim. Raises
+    :class:`GuardViolation` naming every exceeded counter.
+    """
+    if bounds is None:
+        bounds = ENGINE_COMPILE_BOUNDS
+    exceeded = {
+        name: (counts[name], limit)
+        for name, limit in bounds.items()
+        if counts.get(name, 0) > limit
+    }
+    if exceeded:
+        detail = ", ".join(
+            f"{name}={got} > {limit}" for name, (got, limit) in sorted(exceeded.items())
+        )
+        raise GuardViolation(
+            f"{what} compile bounds exceeded: {detail} "
+            f"(observed counts: {dict(counts)!r})"
+        )

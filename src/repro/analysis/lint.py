@@ -1,0 +1,533 @@
+"""Trace-hygiene AST linter — rules mined from this repo's real bugs.
+
+The FL stack only hits its performance contracts while every round stays
+compiled and device-resident. Three classes of regression have actually
+happened here and are all statically visible:
+
+  host-sync       PR 4 removed per-client ``float(loss)`` device syncs
+                  from the round path. Rules: ``host-sync-cast``
+                  (float()/int() on non-trivial expressions inside hot
+                  scopes), ``host-sync-fetch`` (jax.device_get /
+                  block_until_ready / .item() / np.asarray outside the
+                  sanctioned once-per-round fetch points).
+  retrace-hazard  PR 7 fixed MultiRSU building a fresh jax.make_mesh
+                  every round (a retrace per round). Rules:
+                  ``retrace-ctor`` (Mesh/NamedSharding/jit/shard_map
+                  constructed inside an uncached function instead of
+                  cached module scope), ``retrace-static-unhashable``
+                  (list/dict static_argnums — a non-hashable jit cache
+                  key), ``retrace-fresh-array`` (jnp constants rebuilt
+                  per call in a hot scope — host->device churn).
+  purity          Registry-registered functions must be pure in the
+                  `run_round(state, scenario)` sense. Rules:
+                  ``purity-global-mutation`` (``global`` rebinding),
+                  ``purity-np-random`` (the process-global numpy RNG
+                  instead of the packed RandomState from core/state.py),
+                  ``purity-fresh-prngkey`` (jax.random.PRNGKey minted
+                  inside a hot scope instead of threading FLState.key).
+
+Hot scopes are functions whose names match ``HOT_NAME_RE`` (the round /
+engine / aggregation vocabulary of this codebase) plus anything nested
+inside them; retrace and purity rules apply everywhere.
+
+Suppression is explicit and auditable:
+
+  * ``# analysis: sanctioned-sync -- <reason>`` on the offending line
+    marks a designed host<->device fetch point (suppresses the
+    host-sync rules there);
+  * ``# analysis: allow=<rule-id> -- <reason>`` suppresses one rule on
+    that line;
+  * ``analysis/baseline.json`` pins the accepted pre-existing findings
+    (fingerprinted by path + rule + source text, so line drift does not
+    invalidate it). CI fails only on findings beyond the baseline.
+
+CLI (exit 0 iff no unsuppressed, non-baselined findings):
+
+    python -m repro.analysis.lint src/ benchmarks/ examples/
+    python -m repro.analysis.lint src/ --write-baseline   # refresh pins
+
+Pure stdlib: no jax import, safe to run in a bare CI step.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import re
+import sys
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional
+
+DEFAULT_BASELINE = os.path.join("analysis", "baseline.json")
+
+# Function names that constitute the per-round / per-dispatch hot path.
+# Nested functions inherit hotness from their enclosing scope.
+HOT_NAME_RE = re.compile(
+    r"^(run_round|run_cohort|run_campaign|plan_round|body|_scan"
+    r"|local_train|loss_fn|_record_fetch|_client_images|_client_batch"
+    r"|_draw_batches|_cohort_plan|_sample_cohort|_plan_\w+|_client_batches"
+    r"|aggregate\w*|_weighted\w+|cohort_weighted_sum|sharded_\w+"
+    r"|two_stage\w+|wagg\w*|finalize|_mesh_aggregate|region_view)$")
+
+# Constructors whose per-call cost is a retrace / device-state rebuild.
+RETRACE_CTORS = {
+    "jax.jit", "jit", "jax.pmap", "pmap", "jax.make_mesh", "make_mesh",
+    "Mesh", "jax.sharding.Mesh", "NamedSharding", "jax.sharding.NamedSharding",
+    "shard_map", "jax.experimental.shard_map.shard_map",
+}
+
+# jnp array constructors: fresh device constants when called per round.
+FRESH_ARRAY_CTORS = {
+    "jnp.asarray", "jnp.array", "jnp.full", "jnp.full_like", "jnp.zeros",
+    "jnp.ones", "jnp.arange", "jnp.linspace", "jnp.eye",
+}
+
+# Caching decorators that make in-function construction a non-hazard.
+CACHING_DECORATORS = {
+    "functools.lru_cache", "lru_cache", "functools.cache", "cache",
+    "functools.cached_property", "cached_property",
+}
+
+_ALLOW_RE = re.compile(
+    r"#\s*analysis:\s*(?:allow=(?P<rules>[\w,-]+)|(?P<sync>sanctioned-sync))"
+    r"(?:\s*--\s*(?P<reason>.*))?")
+
+HOST_SYNC_RULES = ("host-sync-cast", "host-sync-fetch")
+
+RULE_HINTS = {
+    "host-sync-cast":
+        "float()/int() on a device value blocks until the array is "
+        "fetched — keep losses/stats device-resident and fetch once per "
+        "round (core/topology.py:_record_fetch), or mark the line "
+        "'# analysis: sanctioned-sync -- <why>'",
+    "host-sync-fetch":
+        "device fetches belong at the sanctioned once-per-round/chunk "
+        "points; move the fetch there or mark it "
+        "'# analysis: sanctioned-sync -- <why>'",
+    "retrace-ctor":
+        "construct meshes/shardings/jitted callables once at module "
+        "scope or behind functools.lru_cache (launch/mesh.py:cohort_mesh "
+        "is the pattern); per-call construction retraces or re-enumerates "
+        "devices every round",
+    "retrace-static-unhashable":
+        "static_argnums/static_argnames must be hashable (tuple, not "
+        "list/dict) or every call re-keys the jit cache",
+    "retrace-fresh-array":
+        "hoist the constant to module scope or an lru_cache'd helper — "
+        "rebuilding it per call uploads host->device every round "
+        "(core/hierarchical.py:_count_scale is the pattern)",
+    "purity-global-mutation":
+        "registry entries are pure functions of (state, scenario); "
+        "rebind state through FLState.replace, not module globals",
+    "purity-np-random":
+        "draw from the packed RandomState threaded through FLState "
+        "(core/state.py pack/unpack_host_rng), never the process-global "
+        "numpy RNG — global draws break bit-reproducible schedules",
+    "purity-fresh-prngkey":
+        "thread FLState.key / jax.random.split through the round instead "
+        "of minting a fresh PRNGKey — fresh keys fork the reproducible "
+        "key chain",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    code: str            # stripped source line (fingerprint component)
+
+    @property
+    def hint(self) -> str:
+        return RULE_HINTS.get(self.rule, "")
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline: path + rule +
+        source text. Duplicate texts are disambiguated by count, not
+        index, so unrelated edits above a finding never invalidate it."""
+        return f"{self.path}::{self.rule}::{self.code}"
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule}: "
+                f"{self.message}\n    {self.code}\n    hint: {self.hint}")
+
+
+@dataclass
+class Suppressions:
+    """Per-file `# analysis:` comment directives, by line number.
+
+    A directive is statement-aware: inline (or on a comment line inside
+    a multi-line statement) it covers that whole statement; on a
+    comment-only line it covers the simple statement starting directly
+    below (only the header line of a compound statement — a directive
+    must not blanket a whole `def`/`for` body).
+    """
+    allow: dict = field(default_factory=dict)        # line -> set(rules)
+
+    @classmethod
+    def scan(cls, source: str,
+             tree: Optional[ast.AST] = None) -> "Suppressions":
+        directives = []                              # (line, rules|None)
+        for i, text in enumerate(source.splitlines(), start=1):
+            m = _ALLOW_RE.search(text)
+            if not m:
+                continue
+            rules = None
+            if m.group("sync"):
+                rules = set(HOST_SYNC_RULES)
+            if m.group("rules"):
+                rules = (rules or set()) | {
+                    r.strip() for r in m.group("rules").split(",")}
+            if rules:
+                directives.append((i, rules))
+
+        # line extents of every SIMPLE statement (no nested body)
+        spans = []
+        if tree is not None and directives:
+            for node in ast.walk(tree):
+                if isinstance(node, ast.stmt) and not hasattr(node, "body"):
+                    spans.append((node.lineno, node.end_lineno or node.lineno))
+            spans.sort()
+
+        lines = source.splitlines()
+
+        def _is_commentary(ln: int) -> bool:
+            text = lines[ln - 1].strip() if ln - 1 < len(lines) else ""
+            return not text or text.startswith("#")
+
+        sup = cls()
+        for line, rules in directives:
+            covered = {line, line + 1}
+            enclosing = [s for s in spans if s[0] <= line <= s[1]]
+            if enclosing:                # inline within a statement
+                lo, hi = max(enclosing, key=lambda s: s[0])
+                covered.update(range(lo, hi + 1))
+            else:                        # comment line: cover the next
+                below = [s for s in spans if s[0] > line]  # statement,
+                if below:                # bridging further comment lines
+                    lo, hi = min(below)
+                    if all(_is_commentary(ln) for ln in range(line + 1, lo)):
+                        covered.update(range(lo, hi + 1))
+            for ln in covered:
+                sup.allow.setdefault(ln, set()).update(rules)
+        return sup
+
+    def suppresses(self, finding: Finding) -> bool:
+        return finding.rule in self.allow.get(finding.line, ())
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('jax.device_get',
+    'np.random.choice', ...); '' when it is not a plain name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_trivial_cast_arg(node: ast.AST) -> bool:
+    """Arguments to float()/int() that are not device syncs: literals,
+    len()-like calls, static shape metadata (``x.size``, ``x.ndim``,
+    ``x.shape[i]``, ``jnp.shape(x)[i]`` are Python ints even on device
+    arrays), and numpy-namespace results (``np.mean(...)`` returns a
+    host value — if a device value crossed into numpy, the sync
+    happened at the ``np.asarray`` boundary the fetch rule flags).
+    Bare names stay flagged: ``float(loss)`` is the PR-4 bug shape."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Attribute) and node.attr in ("size", "ndim",
+                                                         "n", "round"):
+        return True
+    if isinstance(node, ast.Subscript):
+        v = node.value
+        if isinstance(v, ast.Attribute) and v.attr == "shape":
+            return True
+        if isinstance(v, ast.Call) and _dotted(v.func) in ("jnp.shape",
+                                                           "np.shape"):
+            return True
+        return False
+    if isinstance(node, ast.Call):
+        name = _dotted(node.func)
+        return (name in {"len", "min", "max", "round", "abs", "sum", "ord",
+                         "bool", "time.time", "time.perf_counter"}
+                or name.startswith(("np.", "numpy.", "math.")))
+    if isinstance(node, (ast.Name,)):
+        return False
+    if isinstance(node, (ast.BinOp,)):
+        return (_is_trivial_cast_arg(node.left)
+                and _is_trivial_cast_arg(node.right))
+    if isinstance(node, ast.UnaryOp):
+        return _is_trivial_cast_arg(node.operand)
+    return False
+
+
+class _Scope:
+    def __init__(self, node, hot: bool, cached: bool):
+        self.node = node
+        self.hot = hot
+        self.cached = cached
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.findings: List[Finding] = []
+        self.scopes: List[_Scope] = []
+
+    # -- helpers -----------------------------------------------------------
+
+    def _code(self, node) -> str:
+        try:
+            return self.lines[node.lineno - 1].strip()
+        except IndexError:                       # pragma: no cover
+            return ""
+
+    def _emit(self, node, rule: str, message: str) -> None:
+        self.findings.append(Finding(
+            path=self.path, line=node.lineno, col=node.col_offset,
+            rule=rule, message=message, code=self._code(node)))
+
+    @property
+    def _in_function(self) -> bool:
+        return bool(self.scopes)
+
+    @property
+    def _hot(self) -> bool:
+        return bool(self.scopes) and self.scopes[-1].hot
+
+    @property
+    def _cached(self) -> bool:
+        return any(s.cached for s in self.scopes)
+
+    # -- scope tracking ----------------------------------------------------
+
+    def _visit_def(self, node) -> None:
+        hot = bool(HOT_NAME_RE.match(node.name)) or self._hot
+        cached = any(
+            _dotted(d.func if isinstance(d, ast.Call) else d)
+            in CACHING_DECORATORS
+            for d in node.decorator_list)
+        self.scopes.append(_Scope(node, hot, cached))
+        self.generic_visit(node)
+        self.scopes.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    # -- purity ------------------------------------------------------------
+
+    def visit_Global(self, node: ast.Global) -> None:
+        self._emit(node, "purity-global-mutation",
+                   f"function rebinds module global(s) "
+                   f"{', '.join(node.names)}")
+        self.generic_visit(node)
+
+    # -- calls carry almost every rule --------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+
+        # host-sync rules fire only inside hot scopes
+        if self._hot:
+            if name in ("float", "int") and node.args and \
+                    not _is_trivial_cast_arg(node.args[0]):
+                self._emit(node, "host-sync-cast",
+                           f"{name}() on a non-trivial expression in hot "
+                           f"scope '{self.scopes[-1].node.name}' — a "
+                           f"device sync if the value is traced/resident")
+            elif name in ("jax.device_get", "device_get",
+                          "jax.block_until_ready", "block_until_ready",
+                          "np.asarray", "np.array", "numpy.asarray",
+                          "numpy.array", "onp.asarray") or \
+                    (isinstance(node.func, ast.Attribute)
+                     and node.func.attr in ("item", "block_until_ready")
+                     and not isinstance(node.func.value, ast.Constant)):
+                self._emit(node, "host-sync-fetch",
+                           f"device fetch '{name or node.func.attr}' in "
+                           f"hot scope "
+                           f"'{self.scopes[-1].node.name}' outside a "
+                           f"sanctioned fetch point")
+            if name in FRESH_ARRAY_CTORS:
+                self._emit(node, "retrace-fresh-array",
+                           f"'{name}' builds a fresh device array every "
+                           f"call of hot scope "
+                           f"'{self.scopes[-1].node.name}'")
+            if name in ("jax.random.PRNGKey", "PRNGKey",
+                        "jax.random.key"):
+                self._emit(node, "purity-fresh-prngkey",
+                           f"fresh PRNG key minted inside hot scope "
+                           f"'{self.scopes[-1].node.name}'")
+
+        # retrace hazards fire in ANY uncached function scope
+        if self._in_function and not self._cached and name in RETRACE_CTORS:
+            self._emit(node, "retrace-ctor",
+                       f"'{name}' constructed inside "
+                       f"'{self.scopes[-1].node.name}' — cache it at "
+                       f"module scope or behind functools.lru_cache")
+        if name in ("jax.jit", "jit", "functools.partial", "partial"):
+            for kw in node.keywords:
+                if kw.arg in ("static_argnums", "static_argnames",
+                              "donate_argnums") and \
+                        isinstance(kw.value, (ast.List, ast.Dict,
+                                              ast.Set)):
+                    self._emit(node, "retrace-static-unhashable",
+                               f"{kw.arg} given a non-hashable "
+                               f"{type(kw.value).__name__.lower()} literal")
+
+        # process-global numpy RNG: anywhere, any scope
+        if name.startswith(("np.random.", "numpy.random.")) and \
+                name.rsplit(".", 1)[-1] not in ("RandomState",
+                                                "default_rng",
+                                                "Generator", "SeedSequence"):
+            self._emit(node, "purity-np-random",
+                       f"process-global numpy RNG call '{name}'")
+
+        self.generic_visit(node)
+
+
+def lint_source(path: str, source: str) -> List[Finding]:
+    """All findings for one file, suppression comments applied."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path=path, line=e.lineno or 1, col=e.offset or 0,
+                        rule="parse-error", message=str(e.msg), code="")]
+    visitor = _Visitor(path, source)
+    visitor.visit(tree)
+    sup = Suppressions.scan(source, tree)
+    return [f for f in visitor.findings if not sup.suppresses(f)]
+
+
+def iter_python_files(targets: Iterable[str]) -> Iterable[str]:
+    for target in targets:
+        if os.path.isfile(target):
+            yield target
+            continue
+        for root, dirs, files in os.walk(target):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in ("__pycache__", ".git", "results"))
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def lint_paths(targets: Iterable[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_python_files(targets):
+        with open(path, "r", encoding="utf-8") as fh:
+            findings.extend(lint_source(os.path.normpath(path), fh.read()))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# baseline: accepted pre-existing findings, fingerprinted without line
+# numbers so unrelated edits never invalidate them
+# --------------------------------------------------------------------------
+
+def baseline_counts(findings: Iterable[Finding]) -> Counter:
+    return Counter(f.fingerprint() for f in findings)
+
+
+def save_baseline(findings: Iterable[Finding], path: str) -> None:
+    counts = baseline_counts(findings)
+    payload = {
+        "comment": "accepted pre-existing findings; refresh with "
+                   "`python -m repro.analysis.lint <targets> "
+                   "--write-baseline` and review the diff",
+        "findings": [{"fingerprint": fp, "count": n}
+                     for fp, n in sorted(counts.items())],
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(payload, fh, indent=1)
+        fh.write("\n")
+
+
+def load_baseline(path: str) -> Counter:
+    with open(path, "r", encoding="utf-8") as fh:
+        payload = json.load(fh)
+    return Counter({e["fingerprint"]: int(e["count"])
+                    for e in payload.get("findings", [])})
+
+
+def apply_baseline(findings: List[Finding],
+                   baseline: Counter) -> List[Finding]:
+    """Findings beyond the baselined count per fingerprint. The first
+    `count` occurrences of each fingerprint are accepted; extras (new
+    code repeating an old pattern) are reported."""
+    remaining = Counter(baseline)
+    fresh = []
+    for f in findings:
+        fp = f.fingerprint()
+        if remaining[fp] > 0:
+            remaining[fp] -= 1
+        else:
+            fresh.append(f)
+    return fresh
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Trace-hygiene linter for the FL stack "
+                    "(host syncs, retrace hazards, purity).")
+    ap.add_argument("targets", nargs="+",
+                    help="files or directories to lint")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline JSON (default {DEFAULT_BASELINE}; "
+                         f"ignored when missing unless --strict-baseline)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline "
+                         "and exit 0")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring any baseline")
+    ap.add_argument("--strict-baseline", action="store_true",
+                    help="error if the baseline file is missing")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", default=None,
+                    help="comma list restricting reported rule ids")
+    args = ap.parse_args(argv)
+
+    findings = lint_paths(args.targets)
+    if args.rules:
+        keep = {r.strip() for r in args.rules.split(",")}
+        findings = [f for f in findings if f.rule in keep]
+
+    if args.write_baseline:
+        save_baseline(findings, args.baseline)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    if not args.no_baseline and os.path.exists(args.baseline):
+        findings = apply_baseline(findings, load_baseline(args.baseline))
+    elif args.strict_baseline and not args.no_baseline:
+        print(f"baseline {args.baseline} not found", file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        print(json.dumps([f.__dict__ for f in findings], indent=1))
+    else:
+        for f in findings:
+            print(f.format())
+        by_rule = Counter(f.rule for f in findings)
+        summary = ", ".join(f"{r}={n}" for r, n in sorted(by_rule.items()))
+        print(f"{len(findings)} finding(s)"
+              + (f" [{summary}]" if findings else ""))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -61,6 +61,8 @@ _wagg_backend = "auto"
 
 def set_wagg_backend(mode: str) -> str:
     """Select the weighted-sum backend; returns the previous mode."""
+    # analysis: allow=purity-global-mutation -- the one deliberate
+    # process-wide switch (scoped form: wagg_backend() below)
     global _wagg_backend
     if mode not in _WAGG_BACKENDS:
         raise ValueError(f"wagg backend {mode!r} not in {_WAGG_BACKENDS}")
@@ -93,6 +95,8 @@ def _weighted_stacked_sum(stacked, weights, mask=None) -> object:
     (w*1.0 == w and w*0.0 == 0.0, so a masked padded sum is bit-exact
     versus the unpadded sum over the valid prefix).
     """
+    # analysis: allow=retrace-fresh-array -- f32 normalization at the
+    # aggregation boundary (no-op for device weights, traced in jit)
     weights = jnp.asarray(weights, jnp.float32)
     backend = _resolve_wagg_backend()
     if backend != "tree":
@@ -101,6 +105,7 @@ def _weighted_stacked_sum(stacked, weights, mask=None) -> object:
                                   interpret=(backend == "interpret"))
 
     if mask is not None:
+        # analysis: allow=retrace-fresh-array -- same normalization
         weights = weights * jnp.asarray(mask, jnp.float32)
 
     def comb(leaf):
@@ -153,8 +158,11 @@ def aggregate_fedavg(trees: Sequence, data_sizes=None):
     """Baseline1: FedAvg; optionally weighted by local dataset size."""
     n = len(trees)
     if data_sizes is None:
+        # analysis: allow=retrace-fresh-array -- legacy list-API entry
+        # point; the stacked path uses SCHEME_WEIGHTS, not this
         w = jnp.full((n,), 1.0 / n)
     else:
+        # analysis: allow=retrace-fresh-array -- legacy list-API entry
         s = jnp.asarray(data_sizes, jnp.float32)
         w = s / jnp.sum(s)
     return _weighted_tree_sum(trees, w)

@@ -181,6 +181,8 @@ class CohortBatch:
         one spec every sharded-cohort boundary uses."""
         from jax.sharding import NamedSharding, PartitionSpec
         axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        # analysis: allow=retrace-ctor -- NamedSharding is a cheap value
+        # object; the mesh (launch/mesh.py) is the cached state
         return NamedSharding(mesh, PartitionSpec(axes))
 
     def pad_to(self, m: int) -> "CohortBatch":

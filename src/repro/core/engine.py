@@ -66,6 +66,7 @@ shapes, so one program covers every round regime.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 from typing import Optional
 
@@ -149,6 +150,7 @@ def _plan_cohort_chunk(state, scenario, k: int):
     key = state.key
     if type(topo) is MultiRSU:
         assign = np.arange(cfg.vehicles_per_round) % topo.n_rsus
+        # analysis: allow=host-sync-cast -- assign is host numpy
         rsu_sizes = [int((assign == r).sum()) for r in range(topo.n_rsus)
                      if (assign == r).any()]
     xs_list, recs = [], []
@@ -158,9 +160,13 @@ def _plan_cohort_chunk(state, scenario, k: int):
         idx = np.stack([_batch_indices(rng, len(scenario.data[c]), cfg)
                         for c in ids])
         blur = mob.blur_level(velocities)
+        # analysis: allow=retrace-fresh-array -- the once-per-round
+        # schedule upload: fresh host draws become device xs here
         xs_list.append((jnp.asarray(ids.astype(np.int32)),
                         jnp.asarray(idx.astype(np.int32)),
                         jnp.stack(cks), velocities, blur, lr))
+        # analysis: sanctioned-sync -- plan-time record build: one
+        # O(cohort) fetch per planned round, off the compiled path
         rec = {"round": rnd, "loss": None,
                "velocities": np.asarray(velocities).tolist(),
                "lr": float(lr), "topology": topo.name}
@@ -180,8 +186,12 @@ def _plan_handover_chunk(state, scenario, k: int):
     n = scenario.cfg.vehicles_per_round
     rng = unpack_host_rng(state.host_rng)
     key = state.key
+    # analysis: allow=host-sync-fetch -- handover topo state is host
+    # numpy (positions/accumulators); copies keep planning pure
     positions = np.asarray(state.topo["positions"])
+    # analysis: allow=host-sync-fetch -- host accumulator copy
     blur_sum = np.array(state.topo["blur_sum"], np.float64)
+    # analysis: allow=host-sync-fetch -- host accumulator copy
     upload_count = np.array(state.topo["upload_count"], np.float64)
     xs_list, recs = [], []
     for i in range(k):
@@ -198,6 +208,8 @@ def _plan_handover_chunk(state, scenario, k: int):
             has_up[rsu] = True
         sync_w = (plan["sync_W"] if plan["synced"]
                   else np.zeros((R,), np.float64)).astype(np.float32)
+        # analysis: allow=retrace-fresh-array -- the once-per-round
+        # schedule upload (handover plan arrays become device xs)
         xs_list.append((jnp.asarray(plan["ids"].astype(np.int32)),
                         jnp.asarray(plan["idx"].astype(np.int32)),
                         jnp.stack(plan["cks"]), plan["velocities"],
@@ -206,6 +218,8 @@ def _plan_handover_chunk(state, scenario, k: int):
                         jnp.asarray(wmat), jnp.asarray(has_up),
                         jnp.asarray(bool(plan["synced"])),
                         jnp.asarray(sync_w)))
+        # analysis: sanctioned-sync -- plan-time record build;
+        # stale/velocities are host plan arrays
         recs.append({"round": rnd, "loss": None,
                      "velocities": np.asarray(plan["velocities"]).tolist(),
                      "lr": float(plan["lr"]), "topology": topo.name,
@@ -259,6 +273,8 @@ def _build_cohort_body(scenario):
             # (losses stream out in cohort order, same as the host body),
             # the reduction sees rsu-major rows
             perm = np.concatenate(sels)
+            # analysis: allow=retrace-ctor -- built once per campaign
+            # callable, memoized in _CALLABLE_CACHE below
             sh_step = shard_map(
                 jax.vmap(local, in_axes=(None, 0, 0, None)), mesh=mesh,
                 in_specs=(P(), P(axes), P(axes), P()),
@@ -395,7 +411,9 @@ def campaign_callables(scenario) -> dict:
             return jax.lax.scan(lambda cc, x: body(ds, cc, x), c, xs)
 
         got = {
+            # analysis: allow=retrace-ctor -- memoized in _CALLABLE_CACHE
             "jit_round": jax.jit(_counted("jit_round", body)),
+            # analysis: allow=retrace-ctor -- memoized in _CALLABLE_CACHE
             "scan": jax.jit(_counted("scan", _scan)),
             "traces": traces,
         }
@@ -461,7 +479,7 @@ def run_campaign(scenario, state: Optional[FLState] = None,
                  rounds: Optional[int] = None, *, mode: str = "auto",
                  checkpoint_every: Optional[int] = None,
                  checkpoint_dir: Optional[str] = None,
-                 log_every: int = 0):
+                 log_every: int = 0, transfer_guard: bool = False):
     """Run `rounds` rounds (default cfg.rounds) through the compiled
     campaign engine. Returns (final state, history) like `run`, with the
     whole schedule bitwise-identical to the eager loop (losses/models
@@ -480,6 +498,13 @@ def run_campaign(scenario, state: Optional[FLState] = None,
                       as the eager `run`, but from the ONCE-per-chunk
                       fetched history — logging never adds a per-round
                       host sync to the compiled path
+    transfer_guard    wrap the fused-round dispatch (not the host-side
+                      planning) in `analysis.guards.no_implicit_transfers`
+                      so any implicit host<->device transfer inside the
+                      compiled path raises. Steady-state assertion: run
+                      one warm-up campaign first — compilation itself
+                      uploads constants and would trip the guard
+                      (tests/test_engine.py::test_round_body_no_implicit_transfers)
     """
     check_campaign_supported(scenario)
     mode = resolve_mode(mode)
@@ -501,16 +526,23 @@ def run_campaign(scenario, state: Optional[FLState] = None,
         k = min(chunk, total - done)
         xs_list, recs, key, rng, topo_host = _plan_chunk(state, scenario, k)
         carry = _carry_of(state, scenario)
-        if mode == "scan":
-            xs = jax.tree.map(lambda *ls: jnp.stack(ls), *xs_list)
-            carry, ys = fns["scan"](dstack, carry, xs)
+        if transfer_guard:
+            from repro.analysis.guards import no_implicit_transfers
+            guard = no_implicit_transfers()
         else:
-            ys = []
-            for x in xs_list:
-                carry, losses = fns["jit_round"](dstack, carry, x)
-                ys.append(losses)
-            ys = jnp.stack(ys)
+            guard = contextlib.nullcontext()
+        with guard:
+            if mode == "scan":
+                xs = jax.tree.map(lambda *ls: jnp.stack(ls), *xs_list)
+                carry, ys = fns["scan"](dstack, carry, xs)
+            else:
+                ys = []
+                for x in xs_list:
+                    carry, losses = fns["jit_round"](dstack, carry, x)
+                    ys.append(losses)
+                ys = jnp.stack(ys)
         # ONE host transfer per chunk: the stacked loss history
+        # analysis: sanctioned-sync -- the designed once-per-chunk fetch
         losses_h = np.asarray(jax.device_get(ys), np.float64)
         for i, rec in enumerate(recs):
             rec["loss"] = float(np.mean(losses_h[i]))

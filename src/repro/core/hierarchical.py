@@ -92,10 +92,17 @@ def aggregate_hierarchical(groups: Sequence, blur_groups: Sequence = None,
         rsu_count.append(cohort.n)
     W = flsimco_weights(jnp.stack(rsu_blur))
     if count_scaled:
-        c = jnp.asarray(rsu_count, jnp.float32)
-        W = W * c
+        W = W * _count_scale(tuple(rsu_count))
         W = W / jnp.sum(W)
     return _weighted_tree_sum(rsu_models, W)
+
+
+@functools.lru_cache(maxsize=128)
+def _count_scale(counts) -> jnp.ndarray:
+    """Device-resident per-RSU vehicle counts, cached by value: RSU
+    geometry repeats every round, so the count vector must not be
+    re-uploaded per aggregation call (lint rule retrace-fresh-array)."""
+    return jnp.asarray(counts, jnp.float32)
 
 
 def two_stage_weighted_psum(tree, blur_level, *, rsu_axis="data",
@@ -114,10 +121,13 @@ def two_stage_weighted_psum(tree, blur_level, *, rsu_axis="data",
     form). With count-scaled level-2 weights and equal per-RSU cohort
     counts this equals the flat single-psum form.
     """
+    # analysis: allow=retrace-fresh-array -- traced under shard_map;
+    # these constants fold at compile time, nothing runs per call
     L = jnp.asarray(blur_level, jnp.float32)
     blocked = L.ndim > 0
     # level 1: vehicles within the RSU
     tot1 = jax.lax.psum(L.sum() if blocked else L, rsu_axis)
+    # analysis: allow=retrace-fresh-array -- traced constants (see above)
     n1 = jax.lax.psum(jnp.asarray(L.size, jnp.float32) if blocked
                       else jnp.ones(()), rsu_axis)
     w1 = (tot1 - L) / jnp.maximum(tot1, 1e-12)
@@ -135,6 +145,7 @@ def two_stage_weighted_psum(tree, blur_level, *, rsu_axis="data",
     # across rsu_axis after the level-1 psum) — no double counting.
     Lbar = tot1 / n1
     tot2 = jax.lax.psum(Lbar, region_axis)
+    # analysis: allow=retrace-fresh-array -- traced constant (see above)
     n2 = jax.lax.psum(jnp.ones(()), region_axis)
     w2 = (tot2 - Lbar) / jnp.maximum(tot2, 1e-12)
     if count_scaled:
@@ -223,13 +234,15 @@ def sharded_cohort_sum(cohort: CohortBatch, w_valid, mesh, *,
     # split: ravel the stacked leaves to one (m, P) f32 matrix (the same
     # layout wagg_stacked kernels consume), pad P to a multiple of the
     # mesh extent, reduce, unravel
-    w = w * jnp.asarray(cohort.mask, jnp.float32)
+    w = w * cohort.mask               # mask is float32 by construction
     leaves = jax.tree.leaves(cohort.trees)
     flat = jnp.concatenate(
         [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
     P_total = flat.shape[1]
     pad = (-P_total) % ext
     if pad:
+        # analysis: allow=retrace-fresh-array -- device-side zero pad;
+        # its width follows the cohort, there is no constant to hoist
         flat = jnp.concatenate(
             [flat, jnp.zeros((m, pad), jnp.float32)], axis=1)
     out = _flat_split_fn(mesh)(flat, w)[:P_total]
@@ -313,18 +326,22 @@ def sharded_hierarchical(stacked_trees, blur, mesh, n_rsus: int, *,
                          f"n_rsus={R}")
     s = m // R
     if reduction == "psum":
+        # analysis: allow=retrace-fresh-array -- f32 normalization at
+        # the aggregation boundary (no-op when blur is already jnp f32)
         return _hier_psum_fn(mesh, count_scaled)(
             stacked_trees, jnp.asarray(blur, jnp.float32))
     # weights exactly as aggregate_hierarchical computes them: per-RSU
     # level-1 weights on each (s,) blur block, level-2 on the stacked
     # block means (count-scaled) — all on replicated (tiny) arrays
+    # analysis: allow=retrace-fresh-array -- f32 normalization at the
+    # aggregation boundary (no-op when blur is already jnp f32)
     blur = jnp.asarray(blur, jnp.float32)
     blocks = [blur[r * s:(r + 1) * s] for r in range(R)]
     w1 = jnp.concatenate([flsimco_weights(b) for b in blocks])
     W2 = flsimco_weights(jnp.stack([b.mean() for b in blocks]))
     if count_scaled:
-        c = jnp.full((R,), float(s), jnp.float32)
-        W2 = W2 * c
+        # cached: same values as jnp.full((R,), s) but not rebuilt per call
+        W2 = W2 * _count_scale((s,) * R)
         W2 = W2 / jnp.sum(W2)
     fn = _hier_exact_fn(mesh, agg._resolve_wagg_backend())
     return fn(stacked_trees, w1, W2)
@@ -337,3 +354,4 @@ def reset_sharded_caches() -> None:
     _flat_split_fn.cache_clear()
     _hier_exact_fn.cache_clear()
     _hier_psum_fn.cache_clear()
+    _count_scale.cache_clear()

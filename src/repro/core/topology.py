@@ -82,6 +82,8 @@ def _batch_indices(rng, data_len: int, cfg) -> np.ndarray:
 def _client_images(scenario, cid: int, idx, velocity):
     """Materialize one client's batch from pre-drawn indices (consumes
     no RNG — blur is a pure function of the velocity draw)."""
+    # analysis: allow=retrace-fresh-array -- the per-round batch upload
+    # IS the data path; indices are fresh draws, nothing to cache
     images = jnp.asarray(scenario.data[cid][idx])
     if scenario.blur_images:
         images = apply_motion_blur(images, velocity,
@@ -152,15 +154,20 @@ def _region_sync_weights(mob, blur_sum, upload_count,
     return W / s if s > 1e-12 else np.full_like(W, 1.0 / len(W))
 
 
-def _record_fetch(losses, velocities):
-    """The one per-client device transfer per round: fetch the record
-    payload (losses + velocities) in a single `device_get`. Losses stay
+def _record_fetch(losses, velocities, lr):
+    """The one per-round device transfer: fetch the whole record payload
+    (losses + velocities + lr) in a single `device_get`. Losses stay
     device-resident inside the `CohortBatch` until here; the mean is
     taken in float64 on host, matching the old per-client `float(loss)`
-    record values bit for bit."""
-    losses_h, v_h = jax.device_get((losses, jnp.asarray(velocities)))
+    record values bit for bit. `device_get` passes host (numpy) inputs
+    through untouched, so callers hand over whatever mix the round
+    produced — no re-upload, no second sync for the lr scalar.
+    """
+    # analysis: sanctioned-sync -- the designed once-per-round record fetch
+    losses_h, v_h, lr_h = jax.device_get((losses, velocities, lr))
+    # analysis: sanctioned-sync -- host-side views of the fetched payload
     return (np.asarray(losses_h, np.float64),
-            np.asarray(v_h).tolist())
+            np.asarray(v_h).tolist(), float(lr_h))
 
 
 class Topology:
@@ -213,11 +220,11 @@ class SingleRSU(Topology):
                                    blur=mob.blur_level(velocities))
         new_tree = agg.AGGREGATORS[cfg.aggregator](cohort, cfg)
         new_cs = client.finalize(cfg, state.client_state, new_tree, uploads)
-        losses, vels = _record_fetch(cohort.valid_losses,
-                                     cohort.valid_velocities)
+        losses, vels, lr_h = _record_fetch(cohort.valid_losses,
+                                           cohort.valid_velocities, lr)
         rec = {"round": state.round, "loss": float(np.mean(losses)),
                "velocities": vels,
-               "lr": float(lr), "topology": self.name}
+               "lr": lr_h, "topology": self.name}
         return state.replace(global_tree=new_tree, key=key,
                              host_rng=pack_host_rng(rng),
                              round=state.round + 1,
@@ -334,7 +341,7 @@ class MultiRSU(Topology):
             cohort, uploads = client.run_cohort(
                 cfg, state.global_tree, state.client_state, batches[perm],
                 jnp.stack([cks[i] for i in perm]), lr, parallel, mesh=mesh)
-            blur_rm = jnp.asarray(blur, jnp.float32)[perm]
+            blur_rm = blur[perm]      # blur_level already yields jnp f32
             cohort = cohort.with_stats(velocities=velocities[perm],
                                        blur=blur_rm)
             new_tree = sharded_hierarchical(
@@ -364,10 +371,10 @@ class MultiRSU(Topology):
         new_cs = client.finalize(cfg, state.client_state, new_tree,
                                  uploads or None)
         # losses in RSU order (matching the old list-extend order), one fetch
-        losses, vels = _record_fetch(losses, velocities)
+        losses, vels, lr_h = _record_fetch(losses, velocities, lr)
         rec = {"round": state.round, "loss": float(np.mean(losses)),
                "velocities": vels,
-               "lr": float(lr), "topology": self.name, "rsu_sizes": sizes}
+               "lr": lr_h, "topology": self.name, "rsu_sizes": sizes}
         return state.replace(global_tree=new_tree, key=key,
                              host_rng=pack_host_rng(rng),
                              round=state.round + 1,
@@ -507,7 +514,10 @@ class HandoverMultiRSU(Topology):
         and returns their successors in the plan dict.
         """
         cfg, mob = scenario.cfg, scenario.mobility
+        # analysis: allow=host-sync-fetch -- host accumulators (copied
+        # by value so the plan mutates nothing; never device-resident)
         blur_sum = np.array(blur_sum, np.float64)
+        # analysis: allow=host-sync-fetch -- host accumulator copy
         upload_count = np.array(upload_count, np.float64)
         n = cfg.vehicles_per_round
         ids = rng.choice(cfg.n_vehicles, size=n, replace=False)
@@ -515,6 +525,8 @@ class HandoverMultiRSU(Topology):
         # level of the participants' captures and the whole fleet's motion
         key, kv = jax.random.split(key)
         fleet_v = mob.sample(kv, cfg.n_vehicles)
+        # analysis: allow=retrace-fresh-array -- once-per-round schedule
+        # upload (fresh host draws enter the device here by design)
         velocities = jnp.take(fleet_v, jnp.asarray(ids))
         lr = scenario.lr_fn(rnd)
         key, *cks = jax.random.split(key, n + 1)
@@ -534,6 +546,8 @@ class HandoverMultiRSU(Topology):
             down_groups.append((rsu, sel))
 
         # motion during the round: everyone moves, positions wrap
+        # analysis: sanctioned-sync -- plan-time fetch of O(fleet)
+        # positions; handover grouping is host-side by design
         positions = np.asarray(mob.advance_positions(
             positions, fleet_v, self.round_duration, self.road_length))
 
@@ -541,6 +555,7 @@ class HandoverMultiRSU(Topology):
         # stale uploads discounted before renormalization
         up = self.rsu_index(positions[ids])
         stale = up != down
+        # analysis: sanctioned-sync -- plan-time fetch of O(cohort) blur
         blur = np.asarray(mob.blur_level(velocities))
         upload_sizes, uploads = [], []
         for rsu in range(self.n_rsus):
@@ -548,6 +563,9 @@ class HandoverMultiRSU(Topology):
             upload_sizes.append(int(sel.size))
             if sel.size == 0:
                 continue
+            # analysis: allow=host-sync-fetch,retrace-fresh-array --
+            # Eq.-11 weights on O(group) arrays; f32-on-device is the
+            # bit-pinned path (tests), the round trip is the price
             w = np.asarray(agg.flsimco_weights(jnp.asarray(blur[sel])))
             w = w * np.where(stale[sel], self.stale_discount, 1.0)
             s = w.sum()
@@ -558,6 +576,7 @@ class HandoverMultiRSU(Topology):
                 # uniform weight
                 continue
             uploads.append((rsu, sel, w / s))
+            # analysis: allow=host-sync-cast -- blur is host numpy here
             blur_sum[rsu] += float(blur[sel].sum())
             upload_count[rsu] += sel.size
 
@@ -582,6 +601,8 @@ class HandoverMultiRSU(Topology):
         rng = unpack_host_rng(state.host_rng)
         rsu_models = list(state.topo["rsu_models"])
         plan = self.plan_round(rng, state.key, state.round,
+                               # analysis: allow=host-sync-fetch --
+                               # positions live in host topo state
                                np.asarray(state.topo["positions"]),
                                state.topo["blur_sum"],
                                state.topo["upload_count"], scenario)
@@ -631,12 +652,13 @@ class HandoverMultiRSU(Topology):
         # between syncs global_tree keeps the last merged model; RSU models
         # stay divergent until sync (region_view() merges on demand without
         # paying an n_rsus-model sum every round)
-        losses_g, vels = _record_fetch(full.losses, velocities)
+        losses_g, vels, lr_h = _record_fetch(full.losses, velocities, lr)
         losses = losses_g[row_of]                 # back to cohort order
         rec = {"round": state.round, "loss": float(np.mean(losses)),
                "velocities": vels,
-               "lr": float(lr), "topology": self.name,
+               "lr": lr_h, "topology": self.name,
                "rsu_sizes": plan["upload_sizes"],
+               # analysis: allow=host-sync-cast -- plan arrays are host numpy
                "n_handovers": int(plan["stale"].sum()),
                "synced": plan["synced"]}
         topo = {"positions": plan["positions"],

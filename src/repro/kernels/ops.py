@@ -110,6 +110,8 @@ def wagg_flat(stacked, w, interpret: bool | None = None, mask=None):
     N, P = stacked.shape
     pad = (-P) % BP
     if pad:
+        # analysis: allow=retrace-fresh-array -- device-side zero pad
+        # to the kernel block size; width follows P, nothing to hoist
         stacked = jnp.concatenate(
             [stacked, jnp.zeros((N, pad), stacked.dtype)], axis=1)
     block = stacked.shape[1] if interpret else BP
@@ -141,6 +143,8 @@ def wagg_stacked(stacked_tree, w, mask=None, interpret: bool | None = None):
     N = leaves[0].shape[0]
     flat = jnp.concatenate(
         [l.reshape(N, -1).astype(jnp.float32) for l in leaves], axis=1)
+    # analysis: allow=retrace-fresh-array -- f32 normalization at the
+    # kernel boundary (no-op for device weights)
     w = jnp.asarray(w, jnp.float32)
     out = wagg_flat(flat, w, interpret, mask=mask)
     return _unravel_like(out, jax.tree.map(lambda x: x[0], stacked_tree))
@@ -155,6 +159,7 @@ def wagg_tree(trees: Sequence, w, interpret: bool | None = None):
         flats.append(jnp.concatenate([l.reshape(-1).astype(jnp.float32)
                                       for l in leaves]))
     stacked = jnp.stack(flats)
+    # analysis: allow=retrace-fresh-array -- legacy list-API boundary
     w = jnp.asarray(w, jnp.float32)
     out = wagg_flat(stacked, w, interpret)
     return _unravel_like(out, trees[0])

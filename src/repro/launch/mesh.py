@@ -87,12 +87,15 @@ def maybe_cohort_mesh(pods: int, rows_per_pod: int):
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    # analysis: allow=retrace-ctor -- launch-time setup, not per-round
+    # (per-round meshes go through the lru_cached cohort_mesh below)
     return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh with the production axis names — lets the same pjit
     code run on the CPU container for integration tests."""
+    # analysis: allow=retrace-ctor -- test-setup helper, not per-round
     return jax.make_mesh((1, 1), ("data", "model"))
 
 

@@ -1,0 +1,412 @@
+"""repro.analysis acceptance tests: linter, contract checker, guards.
+
+Three layers, mirroring the package:
+
+  lint      seeded-violation snippets prove every rule class fires with
+            the right rule id (>= 5 violations per class), and the
+            suppression + baseline mechanics behave;
+  contracts eval_shape catches deliberately broken registry entries —
+            a wrong-treedef aggregator, a mask-dropping client update,
+            a wrong-dtype weighting scheme — while the REAL registries
+            check clean;
+  guards    track_compiles sees fresh XLA compiles, assert_compile_bounds
+            raises GuardViolation past the PR-6 campaign contract, and
+            no_implicit_transfers trips on an implicit numpy upload.
+
+Lint tests are pure stdlib (no jax execution); contract tests allocate
+nothing (abstract interpretation only), so the whole file runs in
+seconds.
+"""
+import textwrap
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts, guards, lint
+from repro.core.cohort import CohortBatch
+
+
+def _rules(findings):
+    return Counter(f.rule for f in findings)
+
+
+def _lint(snippet):
+    return lint.lint_source("snippet.py", textwrap.dedent(snippet))
+
+
+# --------------------------------------------------------------------------
+# lint: seeded violations, one block per rule class
+# --------------------------------------------------------------------------
+
+def test_lint_flags_host_syncs_in_hot_scope():
+    findings = _lint("""\
+        import jax
+        import numpy as np
+
+        def run_round(state, losses, x):
+            a = float(losses[0])
+            b = int(x.mean())
+            c = jax.device_get(losses)
+            jax.block_until_ready(x)
+            d = losses.item()
+            e = np.asarray(x)
+            return a, b, c, d, e
+    """)
+    by_rule = _rules(findings)
+    assert by_rule["host-sync-cast"] == 2
+    assert by_rule["host-sync-fetch"] == 4
+    assert sum(by_rule[r] for r in lint.HOST_SYNC_RULES) >= 5
+    # findings carry location + a fix hint
+    f = findings[0]
+    assert f.path == "snippet.py" and f.line == 5 and f.hint
+
+
+def test_lint_host_syncs_quiet_outside_hot_scope():
+    """The same syncs in a cold helper are fine — hotness is scoped."""
+    findings = _lint("""\
+        import jax
+
+        def summarize(losses, x):
+            return float(losses[0]), jax.device_get(x)
+    """)
+    assert not findings
+
+
+def test_lint_trivial_casts_not_flagged():
+    """Shape metadata and host-side math are not device syncs."""
+    findings = _lint("""\
+        def run_round(x, cfg):
+            a = int(x.shape[0])
+            b = float(x.size)
+            c = int(len(x))
+            d = float(x.ndim + 1)
+            return a, b, c, d
+    """)
+    assert not [f for f in findings if f.rule == "host-sync-cast"]
+
+
+def test_lint_flags_retrace_hazards():
+    findings = _lint("""\
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding
+
+        def run_campaign(sc, spec):
+            mesh = jax.make_mesh((2,), ("data",))
+            sharding = NamedSharding(mesh, spec)
+            fn = jax.jit(sc.step, static_argnums=[0])
+            w = jnp.asarray([0.25, 0.75])
+            z = jnp.full((4,), 0.5)
+            return fn, sharding, w, z
+    """)
+    by_rule = _rules(findings)
+    assert by_rule["retrace-ctor"] == 3            # make_mesh, NamedSharding, jit
+    assert by_rule["retrace-static-unhashable"] == 1
+    assert by_rule["retrace-fresh-array"] == 2
+    assert sum(by_rule.values()) >= 5
+
+
+def test_lint_retrace_quiet_under_lru_cache():
+    """lru_cache'd construction is the sanctioned pattern, not a hazard."""
+    findings = _lint("""\
+        import functools
+        import jax
+
+        @functools.lru_cache(maxsize=None)
+        def cohort_mesh(n):
+            return jax.make_mesh((n,), ("data",))
+    """)
+    assert not [f for f in findings if f.rule == "retrace-ctor"]
+
+
+def test_lint_flags_purity_violations():
+    findings = _lint("""\
+        import jax
+        import numpy as np
+
+        _CACHE = None
+
+        def finalize(tree):
+            global _CACHE
+            key = jax.random.PRNGKey(0)
+            ids = np.random.permutation(8)
+            np.random.seed(0)
+            v = np.random.rand(3)
+            return key, ids, v
+    """)
+    by_rule = _rules(findings)
+    assert by_rule["purity-global-mutation"] == 1
+    assert by_rule["purity-fresh-prngkey"] == 1
+    assert by_rule["purity-np-random"] == 3
+    assert sum(by_rule.values()) >= 5
+    # the packed-RandomState discipline is NOT flagged
+    ok = _lint("""\
+        import numpy as np
+
+        def plan_round(host_rng):
+            rs = np.random.RandomState(0)
+            return rs.permutation(8)
+    """)
+    assert not [f for f in ok if f.rule == "purity-np-random"]
+
+
+# --------------------------------------------------------------------------
+# lint: suppression + baseline mechanics
+# --------------------------------------------------------------------------
+
+def test_suppression_inline_and_preceding_comment():
+    findings = _lint("""\
+        def run_round(losses, velocities, lr):
+            a = float(losses[0])  # analysis: allow=host-sync-cast -- once/round
+            # analysis: sanctioned-sync -- the designed per-round fetch
+            b = (jax.device_get(velocities),
+                 float(lr))
+            return a, b
+    """)
+    assert not findings
+
+
+def test_suppression_is_rule_specific():
+    """allow= names exact rules; other rules on the line still fire."""
+    findings = _lint("""\
+        import jax.numpy as jnp
+
+        def run_round(x):
+            w = float(jnp.asarray(x).sum())  # analysis: allow=host-sync-cast
+            return w
+    """)
+    assert _rules(findings) == {"retrace-fresh-array": 1}
+
+
+def test_suppression_does_not_blanket_compound_bodies():
+    """A comment directive covers the NEXT simple statement, not a whole
+    loop body below it."""
+    findings = _lint("""\
+        def run_round(losses):
+            # analysis: sanctioned-sync -- only the first line below
+            for i in range(3):
+                a = float(losses[i])
+            return a
+    """)
+    assert _rules(findings) == {"host-sync-cast": 1}
+
+
+def test_baseline_accepts_first_n_then_reports_extras(tmp_path):
+    snippet = """\
+        def run_round(losses):
+            return float(losses[0])
+    """
+    old = _lint(snippet)
+    path = str(tmp_path / "baseline.json")
+    lint.save_baseline(old, path)
+    baseline = lint.load_baseline(path)
+    # unchanged code: fully absorbed
+    assert lint.apply_baseline(_lint(snippet), baseline) == []
+    # a new finding with a new fingerprint survives the baseline
+    grown = _lint("""\
+        def run_round(losses):
+            return float(losses[0]), float(losses[1])
+    """)
+    fresh = lint.apply_baseline(grown, baseline)
+    # the reworked line is a NEW fingerprint: both casts on it report
+    assert len(fresh) == 2 and all(
+        f.code == "return float(losses[0]), float(losses[1])" for f in fresh)
+    # fingerprints are line-number free: shifting the finding is a no-op
+    shifted = _lint("""\
+        import os
+
+        def run_round(losses):
+            return float(losses[0])
+    """)
+    assert lint.apply_baseline(shifted, baseline) == []
+
+
+def test_lint_cli_zero_against_committed_baseline(capsys, monkeypatch):
+    """The CI invocation: repo sources lint clean vs analysis/baseline.json."""
+    import os
+    monkeypatch.chdir(os.path.dirname(os.path.dirname(__file__)))
+    rc = lint.main(["src", "benchmarks", "examples"])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "0 finding(s)" in out
+
+
+# --------------------------------------------------------------------------
+# contracts: the real registries check clean
+# --------------------------------------------------------------------------
+
+def test_real_registries_pass_contracts():
+    violations = contracts.check_all()
+    assert violations == [], "\n".join(map(str, violations))
+
+
+# --------------------------------------------------------------------------
+# contracts: broken aggregators -> contract-treedef
+# --------------------------------------------------------------------------
+
+def _good_agg(cohort, cfg):
+    w = cohort.mask / jnp.maximum(cohort.mask.sum(), 1.0)
+    return jax.tree.map(
+        lambda l: jnp.tensordot(w, l, axes=1), cohort.trees)
+
+
+BROKEN_AGGREGATORS = {
+    "wrapped-structure": lambda c, cfg: {"tree": _good_agg(c, cfg)},
+    "reduced-shape": lambda c, cfg: jax.tree.map(
+        lambda l: l.sum(axis=-1), _good_agg(c, cfg)),
+    "cast-dtype": lambda c, cfg: jax.tree.map(
+        lambda l: l.astype(jnp.float16), _good_agg(c, cfg)),
+    "stacked-passthrough": lambda c, cfg: c.trees,
+    "scalar": lambda c, cfg: jnp.zeros(()),
+}
+
+
+def test_broken_aggregators_flagged_with_treedef_rule():
+    violations = contracts.check_aggregators(BROKEN_AGGREGATORS)
+    assert len(violations) == len(BROKEN_AGGREGATORS) >= 5
+    assert {v.entry for v in violations} == set(BROKEN_AGGREGATORS)
+    assert all(v.rule == contracts.RULE_TREEDEF for v in violations)
+    assert all(v.registry == "AGGREGATORS" for v in violations)
+    # and the sane reference passes
+    assert contracts.check_aggregators({"good": _good_agg}) == []
+
+
+# --------------------------------------------------------------------------
+# contracts: broken client updates -> contract-mask
+# --------------------------------------------------------------------------
+
+class _FakeClient:
+    """Minimal CLIENT_UPDATES-shaped entry: echoes the global tree per
+    row. `variant` seeds one specific contract violation."""
+
+    def __init__(self, variant="good"):
+        self.variant = variant
+
+    def init_state(self, cfg, tree):
+        return None
+
+    def run_cohort(self, cfg, tree, client_state, batches, keys, lr,
+                   parallel=True, pad_to=None, mesh=None):
+        n = batches.shape[0]
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape), tree)
+        vec = jnp.zeros((n,), jnp.float32)
+        mask = jnp.ones((n,), jnp.float32)
+        v = self.variant
+        if v == "plain-tree":
+            return stacked, None               # no CohortBatch at all
+        if v == "mask-none":
+            mask = None
+        elif v == "mask-shape":
+            mask = jnp.ones((n + 1,), jnp.float32)
+        elif v == "mask-dtype":
+            mask = jnp.ones((n,), jnp.int32)
+        count = n - 1 if v == "wrong-n" else n
+        return CohortBatch(trees=stacked, losses=vec, mask=mask,
+                           n=count, velocities=vec, blur=vec), None
+
+
+BROKEN_CLIENTS = ("plain-tree", "mask-none", "mask-shape", "mask-dtype",
+                  "wrong-n")
+
+
+def test_broken_client_updates_flagged_with_mask_rule():
+    broken = {v: _FakeClient(v) for v in BROKEN_CLIENTS}
+    violations = contracts.check_client_updates(broken)
+    assert len(BROKEN_CLIENTS) >= 5
+    by_entry = {v.entry: v for v in violations}
+    assert set(by_entry) == set(BROKEN_CLIENTS)
+    assert all(v.rule == contracts.RULE_MASK for v in violations)
+    assert all(v.registry == "CLIENT_UPDATES" for v in violations)
+    # the well-formed variant passes the same checker
+    assert contracts.check_client_updates({"good": _FakeClient()}) == []
+
+
+# --------------------------------------------------------------------------
+# contracts: broken weighting schemes -> contract-weight-*
+# --------------------------------------------------------------------------
+
+def test_scheme_weight_dtype_mismatch_flagged():
+    violations = contracts.check_scheme_weights(
+        {"int-weights": lambda c, cfg: jnp.ones((c.n,), jnp.int32)})
+    assert [v.rule for v in violations] == [contracts.RULE_WEIGHT_DTYPE]
+
+
+def test_scheme_padded_row_leak_flagged_with_hint():
+    """Weights over the padded axis (m,) instead of the valid prefix
+    (n,): the classic CohortBatch bug, flagged with a targeted hint."""
+    violations = contracts.check_scheme_weights(
+        {"padded": lambda c, cfg: c.mask / c.mask.sum()})
+    assert violations and violations[0].rule == contracts.RULE_WEIGHT_SHAPE
+    assert "padded rows" in violations[0].message
+
+
+def test_scheme_crash_reported_not_raised():
+    violations = contracts.check_scheme_weights(
+        {"boom": lambda c, cfg: (_ for _ in ()).throw(ValueError("boom"))})
+    assert [v.rule for v in violations] == [contracts.RULE_EVAL_ERROR]
+
+
+# --------------------------------------------------------------------------
+# contracts: topology registry API
+# --------------------------------------------------------------------------
+
+def test_topology_api_violations_flagged():
+    class NoSignature:
+        name = "nosig"
+
+        def init_topo_state(self, scenario):
+            return {}
+
+        def plan_round(self, state, scenario, rng):
+            return {}
+
+    violations = contracts.check_topologies({"nosig": NoSignature})
+    assert violations
+    assert all(v.rule == contracts.RULE_TOPOLOGY_API for v in violations)
+
+
+# --------------------------------------------------------------------------
+# guards
+# --------------------------------------------------------------------------
+
+def test_track_compiles_counts_fresh_compile():
+    x = jnp.arange(4.0)
+
+    @jax.jit
+    def fresh(v):
+        return v * 2.0 + 1.0
+
+    with guards.track_compiles() as tracker:
+        fresh(x).block_until_ready()
+    assert tracker.backend_compiles >= 1
+    with guards.track_compiles() as tracker:
+        fresh(x).block_until_ready()       # cached: steady state
+    assert tracker.backend_compiles == 0
+
+
+def test_assert_compile_bounds_enforces_engine_contract():
+    guards.assert_compile_bounds({"jit_round": 1, "scan": 2})
+    guards.assert_compile_bounds({"jit_round": 0, "unbounded_extra": 99})
+    with pytest.raises(guards.GuardViolation, match="jit_round=2 > 1"):
+        guards.assert_compile_bounds({"jit_round": 2}, what="test")
+    with pytest.raises(guards.GuardViolation, match="steady_state=1 > 0"):
+        guards.assert_compile_bounds({"steady_state": 1},
+                                     {"steady_state": 0})
+    # the contract has exactly one home
+    assert guards.ENGINE_COMPILE_BOUNDS == {"jit_round": 1, "scan": 2}
+
+
+def test_no_implicit_transfers_blocks_numpy_leak():
+    f = jax.jit(lambda v: v + 1.0)
+    host = np.ones(3, np.float32)
+    f(jnp.asarray(host)).block_until_ready()   # warm OUTSIDE the guard
+    with guards.no_implicit_transfers():
+        dev = jax.device_put(host)             # explicit: allowed
+        f(dev).block_until_ready()
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with guards.no_implicit_transfers():
+            f(host)                            # implicit upload: raises

@@ -261,6 +261,30 @@ def test_log_every_formats_from_chunk_history(capsys):
 # guard rails
 # --------------------------------------------------------------------------
 
+def test_round_body_no_implicit_transfers():
+    """The steady-state campaign dispatch is transfer-clean: with
+    ``transfer_guard=True`` the fused round body runs under
+    ``jax.transfer_guard("disallow")`` (via ``analysis.guards``), so any
+    implicit host<->device movement inside the round loop raises. The
+    only sanctioned transfer is the explicit once-per-chunk
+    ``jax.device_get`` history fetch. The program is warmed first —
+    lowering's constant uploads are outside the guarded window by
+    design — and the guard must not perturb the campaign: the guarded
+    run replays the unguarded one bit for bit."""
+    st_ref, hist_ref = _jit6("single")
+    st, hist = run_campaign(_scenario("single"), rounds=6, mode="jit",
+                            transfer_guard=True)
+    _assert_states_identical(st, st_ref)
+    assert hist == hist_ref
+
+    # the guard itself is live, not a no-op: an implicit transfer inside
+    # the same context manager the engine uses does raise
+    from repro.analysis.guards import no_implicit_transfers
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with no_implicit_transfers():
+            jax.jit(lambda v: v + 1)(np.ones(3))  # numpy leaks into jit
+
+
 def test_unsupported_configs_fail_fast():
     with pytest.raises(ValueError, match="sequential"):
         check_campaign_supported(
