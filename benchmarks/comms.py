@@ -1,0 +1,175 @@
+"""Comms codec benchmark: bytes/round and codec latency at fleet scale.
+
+The measured headline for the delta-compressed comms tier
+(src/repro/comms/): for cohorts of 1k-10k vehicles/round (the small
+synthetic fleet trees of benchmarks/multi_rsu.py — the wire cost scales
+with params x vehicles, not with client FLOPs), account the bytes every
+codec moves per round and time the encode->decode->aggregate stage
+against the plain full-tree aggregation.
+
+Byte accounting (per round, V vehicles, P params, f32):
+
+  baseline   V unicast downlinks + V full-tree uplinks = V * 8P bytes.
+  delta      the base model theta is SHARED by the whole cohort — one
+             4P broadcast downlink per round — and each uplink is a 4P
+             lossless delta: 4P + V*4P bytes (~2x at large V).
+  delta_int8 same broadcast downlink; each uplink is blockwise int8
+             codes + one f32 scale per 256 params: 4P + V*(P' + P'/64)
+             bytes (P' = P padded to 256) — ~7.9x at V=1024 and rising
+             with V toward the 4P/(P'*65/64) ~ 3.94x uplink-only ratio
+             times the unicast-downlink savings.
+
+Both the total (down+up) and the uplink-only ratios are reported; the
+acceptance gate (>= 4x total at V >= 1024 for delta_int8) is asserted
+here, as is the lossless tier's bitwise-identical aggregation.
+
+  PYTHONPATH=src python benchmarks/comms.py [--smoke]
+
+Writes benchmarks/results/BENCH_comms.json (CI uploads it as an
+artifact; the committed copy at the repo root feeds the README table).
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit, save_json
+
+
+def _fleet_cohort(m, seed=0):
+    """m stacked per-vehicle trees (~1.9k params each — the wire cost is
+    what scales here, so the trees stay allocator-friendly at V=10k)."""
+    from repro.core.cohort import CohortBatch
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    trees = {"conv": jax.random.normal(ks[0], (m, 8, 3, 3)),
+             "dense": jax.random.normal(ks[1], (m, 48, 32)),
+             "head": jax.random.normal(ks[2], (m, 32, 8)),
+             "bias": jax.random.normal(ks[3], (m, 48))}
+    blur = jax.random.uniform(jax.random.fold_in(key, 9), (m,),
+                              minval=10.0, maxval=20.0)
+    return CohortBatch.from_stacked(trees, jnp.zeros((m,)), n=m, blur=blur)
+
+
+def _time(fn, repeats, what):
+    from repro.analysis.guards import assert_compile_bounds, track_compiles
+    out = fn()                                            # warmup/compile
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    with track_compiles() as tracker:
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn()
+            jax.block_until_ready(jax.tree.leaves(out)[0])
+        dt = time.perf_counter() - t0
+    assert_compile_bounds({"steady_state": tracker.backend_compiles},
+                          {"steady_state": 0}, what=f"comms/{what}")
+    return dt / repeats * 1e6, out
+
+
+def _assert_bitwise(ref, got, label):
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise SystemExit(f"lossless codec changed the aggregation: "
+                             f"{label}")
+
+
+def round_bytes(codec_name, base, payload, V):
+    """(downlink, uplink, total) bytes for one round's exchange."""
+    from repro.comms.codecs import payload_nbytes, tree_nbytes
+    model = tree_nbytes(base)
+    up = payload_nbytes(payload)            # the whole stacked cohort
+    if codec_name == "identity":
+        down = V * model                    # per-vehicle unicast
+    else:
+        down = model                        # one broadcast of theta
+    return down, up, down + up
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single 1k-vehicle point, 1 repeat")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--fleet", type=int, nargs="+",
+                    default=[1024, 4096, 10240])
+    args = ap.parse_args(argv)
+
+    from repro.comms.codecs import (CODECS, comms_init_state,
+                                    roundtrip_cohort, tree_nbytes)
+    from repro.core.aggregation import AGGREGATORS
+    from repro.core.state import FLConfig
+
+    fleet = [1024] if args.smoke else args.fleet
+    repeats = 1 if args.smoke else args.repeats
+    results = {"config": {"fleet": fleet, "repeats": repeats,
+                          "smoke": bool(args.smoke),
+                          "backend": jax.default_backend()}}
+
+    for V in fleet:
+        c = _fleet_cohort(V)
+        base = jax.tree.map(lambda x: x[0] * 0.5, c.trees)
+        P = sum(int(l.size) for l in jax.tree.leaves(base))
+        results["params_per_vehicle"] = P
+        results["model_bytes"] = tree_nbytes(base)
+        row = {}
+
+        # plain full-tree aggregation: the latency baseline AND the
+        # bitwise reference for the lossless tier. Stages are jitted —
+        # in production the codec traces into the engine round body,
+        # so eager dispatch overhead is not the thing to price
+        cfg0 = FLConfig(aggregator="flsimco", vehicles_per_round=V)
+        # analysis: allow=retrace-ctor -- one jit per fleet size by
+        # design; _time pins steady_state compiles to 0 regardless
+        agg0 = jax.jit(lambda c_: AGGREGATORS["flsimco"](c_, cfg0))
+        us0, ref = _time(lambda: agg0(c), repeats, what=f"identity@V={V}")
+        emit("comms/identity/agg", us0, f"V={V}")
+        d, u, t = round_bytes("identity", base, c.trees, V)
+        row["identity"] = {"latency_us": us0, "down_bytes": d,
+                           "up_bytes": u, "total_bytes": t}
+
+        for name in ("delta", "delta_int8"):
+            cfg = FLConfig(aggregator="flsimco", vehicles_per_round=V,
+                           codec=name)
+            comms = comms_init_state(cfg, base)
+
+            # analysis: allow=retrace-ctor -- one jit per (codec, V)
+            # point by design; compile bound asserted in _time
+            stage = jax.jit(lambda c_, b_, s_, cfg=cfg: AGGREGATORS[
+                "flsimco"](roundtrip_cohort(cfg, c_, b_, s_)[0], cfg))
+            us, got = _time(lambda: stage(c, base, comms), repeats,
+                            what=f"{name}@V={V}")
+            if CODECS[name].lossless:
+                _assert_bitwise(ref, got, f"{name} @ V={V}")
+            payload, _ = CODECS[name].encode(
+                c.trees, base, None if comms is None else comms["ef"])
+            d, u, t = round_bytes(name, base, payload, V)
+            full = row["identity"]
+            row[name] = {
+                "latency_us": us, "down_bytes": d, "up_bytes": u,
+                "total_bytes": t,
+                "ratio_total": full["total_bytes"] / t,
+                "ratio_uplink": full["up_bytes"] / u,
+            }
+            emit(f"comms/{name}/agg", us,
+                 f"V={V};x{row[name]['ratio_total']:.2f}")
+
+        gate = row["delta_int8"]["ratio_total"]
+        if V >= 1024 and gate < 4.0:
+            raise SystemExit(f"delta_int8 bytes/round reduction {gate:.2f}x "
+                             f"< 4x at V={V}")
+        results[f"v{V}"] = row
+        sys.stdout.flush()
+
+    save_json("BENCH_comms.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

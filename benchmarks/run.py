@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract.
   fig5  — vehicles-per-round & local iterations          [paper Fig. 5]
   fig6  — aggregation schemes, loss-gradient std         [paper Fig. 6]
   kernels — Pallas kernel microbench + fusion model
+  comms — codec bytes/round + latency at fleet scale (BENCH_comms.json)
   roofline — per (arch x shape x mesh) roofline terms from the dry-run
 
 Env knobs: BENCH_SCALE=ci|paper (default ci — minutes, not hours).
@@ -32,7 +33,7 @@ def main() -> None:
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc()
 
-    from benchmarks import (beyond_weighting, fig4_flsimco_vs_fedco,
+    from benchmarks import (beyond_weighting, comms, fig4_flsimco_vs_fedco,
                             fig5_cohort_size, fig6_aggregation, kernel_bench,
                             roofline)
 
@@ -66,6 +67,7 @@ def main() -> None:
              "--batch", "32", "--n-per-class", "50"]))
     run("kernels", lambda: kernel_bench.main(["--quick"] if scale == "ci"
                                              else []))
+    run("comms", lambda: comms.main(["--smoke"] if scale == "ci" else []))
     run("roofline", lambda: roofline.main([]))
 
     if failures:

@@ -1,9 +1,17 @@
-"""Batched serving demo: prefill + autoregressive decode with a KV cache.
+"""Transformer decode demo (prefill + KV-cache greedy decode) — NOT the
+FL serving tier.
 
-Loads any assigned architecture (reduced variant by default so it runs on
-CPU), prefill a batch of prompts, then decodes N tokens per sequence with
-greedy sampling — the serve path the decode_32k / long_500k dry-run shapes
-lower at production scale.
+Scope: loads an architecture from the generic model zoo (reduced
+variant by default so it runs on CPU), prefills a batch of prompts,
+then decodes N tokens per sequence — the serve path the decode_32k /
+long_500k dry-run shapes lower at production scale. Nothing here
+touches federated rounds or RSU model distribution.
+
+The FL edge-serving story (ROADMAP open item 3) builds on
+`repro.comms` instead: delta/int8 codecs that cut the per-round model
+exchange to a fraction of full-tree bytes (see benchmarks/comms.py and
+the README bytes/round table). What remains open is the RSU server
+loop with request batching and admission control.
 
   PYTHONPATH=src python examples/serve_batched.py --arch tinyllama-1.1b \
       --reduced --tokens 16

@@ -17,6 +17,12 @@ contract the rest of the stack assumes:
                    valid count it was given.
   TOPOLOGIES       default-constructible strategy classes exposing the
                    Topology API with a JSON-able ``signature()``.
+  CODECS           encode(stacked, base, ef) -> (payload, new_ef) with a
+                   payload of concrete arrays and decode(payload, base)
+                   reproducing the stacked trees' exact structure,
+                   shapes and dtypes; stateful codecs must hand back a
+                   residual of the shape they were given and declare a
+                   round-0 state, stateless ones must declare neither.
 
 All checks interpret the registry entries abstractly — a ShapeDtypeStruct
 cohort over a ShapeDtypeStruct resnet tree — so a broken scheme is
@@ -53,6 +59,7 @@ __all__ = [
     "check_aggregators",
     "check_all",
     "check_client_updates",
+    "check_codecs",
     "check_scheme_weights",
     "check_topologies",
     "main",
@@ -64,6 +71,7 @@ RULE_MASK = "contract-mask"
 RULE_WEIGHT_SHAPE = "contract-weight-shape"
 RULE_WEIGHT_DTYPE = "contract-weight-dtype"
 RULE_TOPOLOGY_API = "contract-topology-api"
+RULE_CODEC = "contract-codec"
 RULE_EVAL_ERROR = "contract-eval-error"
 
 
@@ -300,16 +308,83 @@ def check_topologies(topologies: Optional[Mapping] = None) -> List[Violation]:
     return out
 
 
+def check_codecs(codecs: Optional[Mapping] = None,
+                 cfg: Optional[FLConfig] = None) -> List[Violation]:
+    """The comms-codec roundtrip contract, interpreted abstractly: for
+    every cohort geometry, decode(encode(stacked)) must reproduce the
+    stacked trees' structure/shapes/dtypes exactly (aggregation runs on
+    the reconstruction), and the error-feedback residual must keep the
+    shape it was given (it scatters back into ``FLState.comms``)."""
+    from ..comms import codecs as codecs_mod
+    codecs = codecs_mod.CODECS if codecs is None else codecs
+    tree = model_tree_sds()
+    out: List[Violation] = []
+    for name, codec in sorted(codecs.items()):
+        def bad(rule, msg):
+            return Violation("CODECS", name, rule, msg)
+        for _, m in _GEOMETRIES:
+            entry_cfg = cfg or _check_cfg(vehicles_per_round=m)
+            stacked = jax.tree.map(
+                lambda l: _sds((m,) + tuple(l.shape), l.dtype), tree)
+            try:
+                state = jax.eval_shape(
+                    lambda t: codec.init_state(entry_cfg, t), tree)
+                if codec.stateful:
+                    payload, new_ef = jax.eval_shape(
+                        lambda s, b, e: codec.encode(s, b, e),
+                        stacked, tree, state["ef"])
+                else:
+                    payload, new_ef = jax.eval_shape(
+                        lambda s, b: codec.encode(s, b), stacked, tree)
+                decoded = jax.eval_shape(
+                    lambda p, b: codec.decode(p, b), payload, tree)
+            except Exception as e:  # noqa: BLE001 - report, don't crash
+                out.append(bad(RULE_EVAL_ERROR,
+                               f"raised under eval_shape at m={m}: {e!r}"))
+                break
+            diff = _diff_trees(stacked, decoded)
+            if diff is not None:
+                out.append(bad(RULE_CODEC,
+                               f"decode(encode(...)) is not the stacked "
+                               f"cohort at m={m}: {diff}"))
+                break
+            if not jax.tree.leaves(payload):
+                out.append(bad(RULE_CODEC, "encode returned an empty "
+                                           "payload pytree"))
+                break
+            if codec.stateful:
+                ef = state["ef"] if isinstance(state, dict) else None
+                if ef is None:
+                    out.append(bad(RULE_CODEC,
+                                   "stateful codec without an 'ef' slot "
+                                   "in init_state"))
+                    break
+                if new_ef is None or tuple(new_ef.shape) != tuple(ef.shape):
+                    got = None if new_ef is None else tuple(new_ef.shape)
+                    out.append(bad(RULE_CODEC,
+                                   f"residual shape {got} != the "
+                                   f"{tuple(ef.shape)} it was given"))
+                    break
+            elif state is not None or new_ef is not None:
+                out.append(bad(RULE_CODEC,
+                               "stateless codec declared cross-round "
+                               "state (init_state / new_ef not None)"))
+                break
+    return out
+
+
 def check_all(*, schemes: Optional[Mapping] = None,
               aggregators: Optional[Mapping] = None,
               client_updates: Optional[Mapping] = None,
-              topologies: Optional[Mapping] = None) -> List[Violation]:
+              topologies: Optional[Mapping] = None,
+              codecs: Optional[Mapping] = None) -> List[Violation]:
     """Check every registry (real ones by default, injectable for tests)."""
     out: List[Violation] = []
     out.extend(check_scheme_weights(schemes))
     out.extend(check_aggregators(aggregators))
     out.extend(check_client_updates(client_updates))
     out.extend(check_topologies(topologies))
+    out.extend(check_codecs(codecs))
     return out
 
 
@@ -317,8 +392,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     violations = check_all()
     for v in violations:
         print(str(v), file=sys.stderr)
+    from ..comms import codecs as codecs_mod
     n_entries = (len(agg.SCHEME_WEIGHTS) + len(agg.AGGREGATORS)
-                 + len(clients_mod.CLIENT_UPDATES) + len(topo_mod.TOPOLOGIES))
+                 + len(clients_mod.CLIENT_UPDATES) + len(topo_mod.TOPOLOGIES)
+                 + len(codecs_mod.CODECS))
     if violations:
         print(f"contracts: {len(violations)} violation(s) across "
               f"{n_entries} registry entries", file=sys.stderr)
@@ -327,7 +404,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
           f"(SCHEME_WEIGHTS={len(agg.SCHEME_WEIGHTS)}, "
           f"AGGREGATORS={len(agg.AGGREGATORS)}, "
           f"CLIENT_UPDATES={len(clients_mod.CLIENT_UPDATES)}, "
-          f"TOPOLOGIES={len(topo_mod.TOPOLOGIES)})")
+          f"TOPOLOGIES={len(topo_mod.TOPOLOGIES)}, "
+          f"CODECS={len(codecs_mod.CODECS)})")
     return 0
 
 

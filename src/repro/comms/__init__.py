@@ -1,0 +1,9 @@
+"""Comms tier: delta-compressed model exchange (ROADMAP item 3)."""
+from repro.comms.codecs import (CODECS, Codec, comms_init_state,
+                                payload_nbytes, q8_backend,
+                                roundtrip_cohort, set_q8_backend,
+                                tree_nbytes)
+
+__all__ = ["CODECS", "Codec", "comms_init_state", "payload_nbytes",
+           "q8_backend", "roundtrip_cohort", "set_q8_backend",
+           "tree_nbytes"]

@@ -74,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comms.codecs import CODECS
 from repro.core import aggregation as agg
 from repro.core.clients import raw_local_step
 from repro.core.cohort import CohortBatch
@@ -235,6 +236,16 @@ def _plan_handover_chunk(state, scenario, k: int):
 # round bodies (one per topology family)
 # --------------------------------------------------------------------------
 
+def _round_codec(cfg):
+    """The codec the compiled bodies thread, or None for identity (the
+    no-op stage costs nothing to skip at trace time). A stateful codec
+    grows the carry by its error-feedback residual — still ONE traced
+    program per campaign (`compile_counts`): the codec is part of the
+    cfg in the callable cache key, and its ops trace into the same
+    round body."""
+    return None if cfg.codec == "identity" else CODECS[cfg.codec]
+
+
 def _client_batches(dstack, ids, idx, velocities, scenario):
     batches = dstack[ids[:, None], idx]
     if scenario.blur_images:
@@ -282,9 +293,14 @@ def _build_cohort_body(scenario):
         else:
             mesh = None
     aggregator = agg.AGGREGATORS[cfg.aggregator]
+    codec = _round_codec(cfg)
 
     def body(dstack, carry, xs):
-        (tree,) = carry
+        if codec is not None and codec.stateful:
+            tree, ef = carry
+        else:
+            (tree,) = carry
+            ef = None
         ids, idx, cks, velocities, blur, lr = xs
         batches = _client_batches(dstack, ids, idx, velocities, scenario)
         if mesh is not None:
@@ -294,6 +310,13 @@ def _build_cohort_body(scenario):
                 tree, batches, cks, lr)
         trees, losses, blur = jax.lax.optimization_barrier(
             (trees, losses, blur))
+        new_ef = None
+        if codec is not None:
+            # comms tier, in cohort order (EF slot i = cohort position
+            # i — identical to the host paths' rows=sel/perm scatter);
+            # the aggregation below consumes the RECONSTRUCTED trees
+            payload, new_ef = codec.encode(trees, tree, ef)
+            trees = codec.decode(payload, tree)
         if mesh is not None:
             new_tree = sharded_hierarchical(
                 jax.tree.map(lambda x: x[perm], trees), blur[perm], mesh,
@@ -311,6 +334,10 @@ def _build_cohort_body(scenario):
             cohort = CohortBatch.from_stacked(trees, losses).with_stats(
                 velocities=velocities, blur=blur)
             new_tree = aggregator(cohort, cfg)
+        if new_ef is not None:
+            new_tree, new_ef = jax.lax.optimization_barrier(
+                (new_tree, new_ef))
+            return (new_tree, new_ef), losses
         new_tree = jax.lax.optimization_barrier(new_tree)
         return (new_tree,), losses
 
@@ -331,9 +358,14 @@ def _build_handover_body(scenario):
     cfg, topo = scenario.cfg, scenario.topology
     R = topo.n_rsus
     local = raw_local_step(cfg)
+    codec = _round_codec(cfg)
 
     def body(dstack, carry, xs):
-        gtree, rstack = carry
+        if codec is not None and codec.stateful:
+            gtree, rstack, ef = carry
+        else:
+            gtree, rstack = carry
+            ef = None
         ids, idx, cks, velocities, lr, down, wmat, has_up, sync, sync_w = xs
         batches = _client_batches(dstack, ids, idx, velocities, scenario)
         # each client trains from the model of the RSU covering its
@@ -342,6 +374,14 @@ def _build_handover_body(scenario):
         trees, losses = jax.vmap(local, in_axes=(0, 0, 0, None))(
             init_trees, batches, cks, lr)
         trees, losses = jax.lax.optimization_barrier((trees, losses))
+        new_ef = None
+        if codec is not None:
+            # comms tier: each client's delta is against its DOWNLOAD
+            # RSU's model (a per-row stacked base), matching the eager
+            # handover path's per-group roundtrip
+            payload, new_ef = codec.encode(trees, init_trees, ef,
+                                           stacked_base=True)
+            trees = codec.decode(payload, init_trees, stacked_base=True)
         # uploads: each RSU's new model is a weighted sum over the FULL
         # cohort with zero weights off-group; RSUs without usable
         # uploads keep their model
@@ -361,6 +401,10 @@ def _build_handover_body(scenario):
             rstack, merged)
         gtree = jax.tree.map(lambda g, m: jnp.where(sync, m, g),
                              gtree, merged)
+        if new_ef is not None:
+            gtree, rstack, new_ef = jax.lax.optimization_barrier(
+                (gtree, rstack, new_ef))
+            return (gtree, rstack, new_ef), losses
         gtree, rstack = jax.lax.optimization_barrier((gtree, rstack))
         return (gtree, rstack), losses
 
@@ -444,14 +488,22 @@ def reset_engine_caches() -> None:
 # --------------------------------------------------------------------------
 
 def _carry_of(state, scenario):
+    codec = _round_codec(scenario.cfg)
+    # a stateful codec's error-feedback residual rides in the carry so
+    # the compiled chunks thread it exactly like the eager rounds do
+    ef = (state.comms["ef"],) if codec is not None and codec.stateful else ()
     if isinstance(scenario.topology, HandoverMultiRSU):
         rstack = jax.tree.map(lambda *ls: jnp.stack(ls),
                               *state.topo["rsu_models"])
-        return (state.global_tree, rstack)
-    return (state.global_tree,)
+        return (state.global_tree, rstack) + ef
+    return (state.global_tree,) + ef
 
 
 def _state_of(carry, state, scenario, key, rng, k, topo_host):
+    codec = _round_codec(scenario.cfg)
+    comms = state.comms
+    if codec is not None and codec.stateful:
+        carry, comms = carry[:-1], {"ef": carry[-1]}
     if isinstance(scenario.topology, HandoverMultiRSU):
         gtree, rstack = carry
         R = scenario.topology.n_rsus
@@ -462,10 +514,10 @@ def _state_of(carry, state, scenario, key, rng, k, topo_host):
                 "upload_count": topo_host["upload_count"]}
         return state.replace(global_tree=gtree, key=key,
                              host_rng=pack_host_rng(rng),
-                             round=state.round + k, topo=topo)
+                             round=state.round + k, topo=topo, comms=comms)
     return state.replace(global_tree=carry[0], key=key,
                          host_rng=pack_host_rng(rng),
-                         round=state.round + k)
+                         round=state.round + k, comms=comms)
 
 
 def _plan_chunk(state, scenario, k):

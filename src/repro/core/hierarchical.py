@@ -106,7 +106,8 @@ def _count_scale(counts) -> jnp.ndarray:
 
 
 def two_stage_weighted_psum(tree, blur_level, *, rsu_axis="data",
-                            region_axis="pod", count_scaled=True):
+                            region_axis="pod", count_scaled=True,
+                            accum_dtype=None):
     """Mesh-level hierarchical Eq. 11: weighted psum over `rsu_axis`, then
     over `region_axis`. Call inside shard_map with both axes bound.
 
@@ -120,6 +121,14 @@ def two_stage_weighted_psum(tree, blur_level, *, rsu_axis="data",
     path; the bit-exact alternative is `sharded_hierarchical`'s gather
     form). With count-scaled level-2 weights and equal per-RSU cohort
     counts this equals the flat single-psum form.
+
+    accum_dtype: None (default) keeps the existing op sequence — f32
+    weighted sums, cast back per level — bit-compatible with the pinned
+    mesh tests. A wider dtype (e.g. jnp.float64 under enable_x64) makes
+    BOTH weighted reductions accumulate in that dtype, casting back to
+    each leaf's dtype only after level 2 — the psum reassociation error
+    then shrinks from ~1e-6 to the f32 rounding floor
+    (tests/test_hierarchical.py pins the tightened tolerance).
     """
     # analysis: allow=retrace-fresh-array -- traced under shard_map;
     # these constants fold at compile time, nothing runs per call
@@ -133,11 +142,20 @@ def two_stage_weighted_psum(tree, blur_level, *, rsu_axis="data",
     w1 = (tot1 - L) / jnp.maximum(tot1, 1e-12)
     s1 = jax.lax.psum(w1.sum() if blocked else w1, rsu_axis)
     w1 = jnp.where(s1 > 1e-12, w1 / jnp.maximum(s1, 1e-12), 1.0 / n1)
+    ad = None if accum_dtype is None else jnp.dtype(accum_dtype)
     if blocked:
         def red(x):
+            if ad is not None:
+                return jax.lax.psum(
+                    jnp.tensordot(w1.astype(ad), x.astype(ad), axes=1),
+                    rsu_axis)
             y = jnp.tensordot(w1, x.astype(jnp.float32), axes=1)
             return jax.lax.psum(y, rsu_axis).astype(x.dtype)
         rsu_model = jax.tree.map(red, tree)
+    elif ad is not None:
+        rsu_model = jax.tree.map(
+            lambda x: jax.lax.psum(x.astype(ad) * w1.astype(ad), rsu_axis),
+            tree)
     else:
         rsu_model = weighted_psum_tree(tree, w1, rsu_axis)
     # level 2: RSUs within the region. psum over `region_axis` alone sums
@@ -152,6 +170,13 @@ def two_stage_weighted_psum(tree, blur_level, *, rsu_axis="data",
         w2 = w2 * n1
     s2 = jax.lax.psum(w2, region_axis)
     w2 = jnp.where(s2 > 1e-12, w2 / jnp.maximum(s2, 1e-12), 1.0 / n2)
+    if ad is not None:
+        # rsu_model is still in accum_dtype; cast back only after the
+        # final reduction (target dtypes come from the input leaves)
+        out = jax.tree.map(
+            lambda x: jax.lax.psum(x * w2.astype(ad), region_axis),
+            rsu_model)
+        return jax.tree.map(lambda o, x: o.astype(x.dtype), out, tree)
     return weighted_psum_tree(rsu_model, w2, region_axis)
 
 
@@ -291,12 +316,14 @@ def _hier_exact_fn(mesh, backend: str):
 
 
 @functools.lru_cache(maxsize=64)
-def _hier_psum_fn(mesh, count_scaled: bool):
+def _hier_psum_fn(mesh, count_scaled: bool, accum_name: str = None):
     from repro.compat import shard_map
+    accum_dtype = None if accum_name is None else jnp.dtype(accum_name)
 
     def body(blk_trees, blur_blk):
         return two_stage_weighted_psum(blk_trees, blur_blk,
-                                       count_scaled=count_scaled)
+                                       count_scaled=count_scaled,
+                                       accum_dtype=accum_dtype)
 
     return jax.jit(shard_map(body, mesh=mesh,
                              in_specs=(P(COHORT_AXES), P(COHORT_AXES)),
@@ -305,7 +332,8 @@ def _hier_psum_fn(mesh, count_scaled: bool):
 
 def sharded_hierarchical(stacked_trees, blur, mesh, n_rsus: int, *,
                          count_scaled: bool = True,
-                         reduction: str = "exact"):
+                         reduction: str = "exact",
+                         accum_dtype=None):
     """Two-level Eq. 11 over an RSU-MAJOR stacked cohort sharded on
     `mesh` (pod=n_rsus, data=d with d | per-RSU size).
 
@@ -315,7 +343,9 @@ def sharded_hierarchical(stacked_trees, blur, mesh, n_rsus: int, *,
     replicated blur and reduces via gathers — bit-exact with
     `aggregate_hierarchical` on the same cohorts; reduction="psum" is the
     blocked `two_stage_weighted_psum` collective — one model per device
-    on the wire, float-close (atol~1e-5).
+    on the wire, float-close (atol~1e-5). accum_dtype widens the psum
+    reduction's accumulator (see `two_stage_weighted_psum`); it has no
+    effect on the already-bit-exact "exact" reduction.
     """
     if reduction not in ("exact", "psum"):
         raise ValueError(f"reduction {reduction!r} not in ('exact', 'psum')")
@@ -326,9 +356,11 @@ def sharded_hierarchical(stacked_trees, blur, mesh, n_rsus: int, *,
                          f"n_rsus={R}")
     s = m // R
     if reduction == "psum":
+        accum_name = None if accum_dtype is None \
+            else jnp.dtype(accum_dtype).name
         # analysis: allow=retrace-fresh-array -- f32 normalization at
         # the aggregation boundary (no-op when blur is already jnp f32)
-        return _hier_psum_fn(mesh, count_scaled)(
+        return _hier_psum_fn(mesh, count_scaled, accum_name)(
             stacked_trees, jnp.asarray(blur, jnp.float32))
     # weights exactly as aggregate_hierarchical computes them: per-RSU
     # level-1 weights on each (s,) blur block, level-2 on the stacked

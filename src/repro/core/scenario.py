@@ -177,9 +177,11 @@ class Scenario:
         rng = np.random.RandomState(cfg.seed)
         client_state = CLIENT_UPDATES[cfg.client].init_state(cfg, tree)
         topo, key = self.topology.init_state(cfg, self.mobility, tree, key)
+        from repro.comms.codecs import comms_init_state
+        comms = comms_init_state(cfg, tree)
         return FLState(global_tree=tree, key=key,
                        host_rng=pack_host_rng(rng), round=0,
-                       topo=topo, client_state=client_state)
+                       topo=topo, client_state=client_state, comms=comms)
 
 
 # --------------------------------------------------------------------------

@@ -69,6 +69,8 @@ class FLConfig:
     queue_len: int = 4096         # FedCo global queue (Sec. 5.2)
     feature_dim: int = 128
     normalize_weights: bool = True
+    codec: str = "identity"       # any CODECS name (comms/codecs.py):
+                                  # how model trees cross the V2I link
     seed: int = 0
 
     def __post_init__(self):
@@ -84,6 +86,7 @@ class FLConfig:
             object.__setattr__(self, "client", "dtssl")
         # deferred imports: the registries live in modules that import
         # FLConfig, so resolving them here (call time) breaks the cycle
+        from repro.comms.codecs import CODECS
         from repro.core.aggregation import AGGREGATORS
         from repro.core.clients import CLIENT_UPDATES
         if self.aggregator not in AGGREGATORS:
@@ -94,6 +97,9 @@ class FLConfig:
             raise ValueError(
                 f"unknown client update {self.client!r}; valid: "
                 f"{sorted(CLIENT_UPDATES)}")
+        if self.codec not in CODECS:
+            raise ValueError(
+                f"unknown codec {self.codec!r}; valid: {sorted(CODECS)}")
 
 
 # --------------------------------------------------------------------------
@@ -140,6 +146,9 @@ class FLState:
                   positions/rsu_models/sync stats for HandoverMultiRSU)
     client_state  per-client-algorithm state (None for DT-SSL; key_tree +
                   queue for FedCo)
+    comms         per-codec comms state (None for stateless codecs; the
+                  error-feedback residual for delta_int8 — see
+                  comms/codecs.py)
     """
 
     global_tree: Any
@@ -148,6 +157,7 @@ class FLState:
     round: int = 0
     topo: dict = field(default_factory=dict)
     client_state: Optional[dict] = None
+    comms: Optional[dict] = None
 
     def replace(self, **kw) -> "FLState":
         return dataclasses.replace(self, **kw)
@@ -161,7 +171,8 @@ class FLState:
                 "host_rng": dict(self.host_rng),
                 "round": np.int64(self.round),
                 "topo": self.topo,
-                "client_state": self.client_state}
+                "client_state": self.client_state,
+                "comms": self.comms}
 
     @classmethod
     def from_tree(cls, tree: dict) -> "FLState":
@@ -174,10 +185,12 @@ class FLState:
         if "rsu_models" in topo:
             topo["rsu_models"] = tuple(topo["rsu_models"])
         cs = tree.get("client_state")
+        comms = tree.get("comms")
         return cls(global_tree=tree["global_tree"],
                    key=tree["key"],
                    host_rng={k: np.asarray(v)
                              for k, v in tree["host_rng"].items()},
                    round=int(tree["round"]),
                    topo=topo,
-                   client_state=dict(cs) if cs else None)
+                   client_state=dict(cs) if cs else None,
+                   comms=dict(comms) if comms else None)

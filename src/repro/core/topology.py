@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comms.codecs import roundtrip_cohort
 from repro.core import aggregation as agg
 from repro.core.clients import CLIENT_UPDATES
 from repro.core.cohort import CohortBatch, bucket_size
@@ -218,6 +219,11 @@ class SingleRSU(Topology):
             parallel)
         cohort = cohort.with_stats(velocities=velocities,
                                    blur=mob.blur_level(velocities))
+        # comms tier: the cohort the RSU aggregates is what survived the
+        # V2I link (encode -> decode against the broadcast base model);
+        # identity short-circuits, the lossless delta codec is bitwise
+        cohort, comms = roundtrip_cohort(cfg, cohort, state.global_tree,
+                                         state.comms)
         new_tree = agg.AGGREGATORS[cfg.aggregator](cohort, cfg)
         new_cs = client.finalize(cfg, state.client_state, new_tree, uploads)
         losses, vels, lr_h = _record_fetch(cohort.valid_losses,
@@ -228,7 +234,7 @@ class SingleRSU(Topology):
         return state.replace(global_tree=new_tree, key=key,
                              host_rng=pack_host_rng(rng),
                              round=state.round + 1,
-                             client_state=new_cs), rec
+                             client_state=new_cs, comms=comms), rec
 
 
 def _require_flsimco(cfg: FLConfig, name: str) -> None:
@@ -344,6 +350,11 @@ class MultiRSU(Topology):
             blur_rm = blur[perm]      # blur_level already yields jnp f32
             cohort = cohort.with_stats(velocities=velocities[perm],
                                        blur=blur_rm)
+            # codec rows are perm (cohort indices): EF slot = cohort
+            # position, identical to the host branch's per-group slots
+            cohort, comms = roundtrip_cohort(cfg, cohort,
+                                             state.global_tree,
+                                             state.comms, rows=perm)
             new_tree = sharded_hierarchical(
                 cohort.valid_trees, blur_rm, mesh, len(sels),
                 count_scaled=self.count_scaled,
@@ -352,13 +363,21 @@ class MultiRSU(Topology):
             losses = cohort.valid_losses   # already rsu-major
             uploads = list(uploads) if uploads else []
         else:
+            comms = state.comms
             cohorts, sizes, uploads = [], [], []
             for sel in sels:
                 cohort, ups = client.run_cohort(
                     cfg, state.global_tree, state.client_state,
                     batches[sel], [cks[i] for i in sel], lr, parallel)
-                cohorts.append(cohort.with_stats(velocities=velocities[sel],
-                                                 blur=blur[sel]))
+                cohort = cohort.with_stats(velocities=velocities[sel],
+                                           blur=blur[sel])
+                # per-group roundtrip; the codec is row-wise, so group
+                # application == full-cohort application (rows=sel keeps
+                # EF slots in cohort order, matching the sharded branch)
+                cohort, comms = roundtrip_cohort(cfg, cohort,
+                                                 state.global_tree,
+                                                 comms, rows=sel)
+                cohorts.append(cohort)
                 sizes.append(int(sel.size))
                 if ups:
                     uploads.extend(ups)
@@ -378,7 +397,7 @@ class MultiRSU(Topology):
         return state.replace(global_tree=new_tree, key=key,
                              host_rng=pack_host_rng(rng),
                              round=state.round + 1,
-                             client_state=new_cs), rec
+                             client_state=new_cs, comms=comms), rec
 
     def _mesh_aggregate(self, cohorts: Sequence[CohortBatch], mesh):
         """Region merge sharded over the cached cohort mesh
@@ -618,6 +637,7 @@ class HandoverMultiRSU(Topology):
         if self.mesh_shard and parallel:
             from repro.launch.mesh import maybe_cohort_mesh
             mesh = maybe_cohort_mesh(1, bucket_size(cfg.vehicles_per_round))
+        comms = state.comms
         group_sel, group_cohorts = [], []
         for rsu, sel in plan["down_groups"]:
             batches = jnp.stack([
@@ -628,6 +648,12 @@ class HandoverMultiRSU(Topology):
                 [plan["cks"][i] for i in sel], lr, parallel=parallel,
                 pad_to=bucket_size(int(sel.size))
                 if (parallel and self.bucketed) else None, mesh=mesh)
+            # comms tier: each client's delta base is its DOWNLOAD RSU's
+            # model (the tree it trained from); rows=sel keeps EF slots
+            # in cohort order, matching the engine's per-row gather.
+            # Bucketed padding rows are re-padded from the decoded rows.
+            cohort, comms = roundtrip_cohort(cfg, cohort, rsu_models[rsu],
+                                             comms, rows=sel)
             group_sel.append(sel)
             group_cohorts.append(cohort)
         # one stacked cohort of all n valid clients (padding dropped),
@@ -667,7 +693,8 @@ class HandoverMultiRSU(Topology):
                 "upload_count": plan["upload_count"]}
         return state.replace(global_tree=new_tree, key=plan["key"],
                              host_rng=pack_host_rng(rng),
-                             round=state.round + 1, topo=topo), rec
+                             round=state.round + 1, topo=topo,
+                             comms=comms), rec
 
     def region_view(self, state: FLState):
         """Uniform merge of the current per-RSU models — an evaluation

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.dt_loss import BM, dt_loss_fwd_pallas
+from repro.kernels.qdelta import BQ, BT, q8_decode_pallas, q8_encode_pallas
 from repro.kernels.rwkv6 import CHUNK, rwkv6_pallas
 from repro.kernels.wagg import BP, wagg_pallas
 
@@ -163,6 +164,60 @@ def wagg_tree(trees: Sequence, w, interpret: bool | None = None):
     w = jnp.asarray(w, jnp.float32)
     out = wagg_flat(stacked, w, interpret)
     return _unravel_like(out, trees[0])
+
+
+# --------------------------------------------------------------------------
+# blockwise-int8 delta codec (comms tier)
+# --------------------------------------------------------------------------
+
+def _pad_cols(x, multiple):
+    P = x.shape[1]
+    pad = (-P) % multiple
+    if pad:
+        # analysis: allow=retrace-fresh-array -- device-side zero pad to
+        # the kernel block size; width follows P, nothing to hoist
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:1] + (pad,), x.dtype)], axis=1)
+    return x, P
+
+
+def q8_encode_flat(flat, ef, backend: str = "auto"):
+    """Blockwise-int8 encode of an (N, P) f32 delta matrix, P % BQ == 0.
+
+    backend: "auto" (fused kernel on TPU, jnp reference elsewhere),
+    "fused", "interpret" (Pallas in interpret mode — the CPU parity
+    path), or "ref". Returns (codes (N, P) int8, scales (N, P/BQ) f32,
+    new_ef (N, P) f32) — semantics defined by `ref.q8_encode_ref`.
+    """
+    if backend == "auto":
+        backend = "fused" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.q8_encode_ref(flat, ef, block=BQ)
+    interpret = backend == "interpret"
+    # interpret mode wants a grid of 1 (same policy as wagg_flat); the
+    # compiled TPU kernel tiles P into BT-sized VMEM blocks
+    padded, P = _pad_cols(flat, BQ if interpret else BT)
+    ef_p, _ = _pad_cols(ef, BQ if interpret else BT)
+    block = padded.shape[1] if interpret else BT
+    codes, scales, new_ef = q8_encode_pallas(padded, ef_p,
+                                             interpret=interpret,
+                                             block=block)
+    return codes[:, :P], scales[:, :P // BQ], new_ef[:, :P]
+
+
+def q8_decode_flat(codes, scales, backend: str = "auto"):
+    """Dequantize (N, P) int8 codes with (N, P/BQ) scales -> (N, P) f32
+    (semantics: `ref.q8_decode_ref`; backends as `q8_encode_flat`)."""
+    if backend == "auto":
+        backend = "fused" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.q8_decode_ref(codes, scales, block=BQ)
+    interpret = backend == "interpret"
+    padded, P = _pad_cols(codes, BQ if interpret else BT)
+    sc_p, _ = _pad_cols(scales, 1 if interpret else BT // BQ)
+    block = padded.shape[1] if interpret else BT
+    out = q8_decode_pallas(padded, sc_p, interpret=interpret, block=block)
+    return out[:, :P]
 
 
 # --------------------------------------------------------------------------

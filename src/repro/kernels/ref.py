@@ -47,6 +47,45 @@ def wagg_ref(stacked, w):
 
 
 # --------------------------------------------------------------------------
+# blockwise-int8 delta quantization (comms codec)
+# --------------------------------------------------------------------------
+
+def q8_encode_ref(flat, ef, block: int = 256):
+    """Blockwise symmetric int8 quantization with error feedback.
+
+    flat, ef: (N, P) f32 with P % block == 0. Each length-`block` slice
+    of a row gets its own scale max|y| * (1/127) (y = flat + ef, the
+    residual folded in BEFORE quantization; the constant reciprocal
+    multiply — not a true division — keeps the Pallas kernel bitwise-
+    identical, since backends lower x/127.0 differently); codes are
+    round-half-even (jnp.round) in [-127, 127]; all-zero blocks take
+    scale 0 and decode to exact zeros. Returns (codes int8 (N, P),
+    scales f32 (N, P/block), new_ef f32 (N, P)) where
+    new_ef = y - dequant(codes) is the residual the NEXT round folds
+    back in.
+    """
+    N, P = flat.shape
+    y = (flat + ef).reshape(N, P // block, block)
+    absmax = jnp.max(jnp.abs(y), axis=-1)
+    scales = absmax * jnp.float32(1.0 / 127.0)
+    inv = jnp.where(scales > 0.0, 1.0 / scales, 0.0)
+    codes = jnp.clip(jnp.round(y * inv[..., None]), -127.0, 127.0)
+    codes = codes.astype(jnp.int8)
+    deq = codes.astype(jnp.float32) * scales[..., None]
+    new_ef = (y - deq).reshape(N, P)
+    return codes.reshape(N, P), scales, new_ef
+
+
+def q8_decode_ref(codes, scales, block: int = 256):
+    """Inverse of `q8_encode_ref` up to the quantization error: (N, P)
+    int8 codes x (N, P/block) f32 scales -> (N, P) f32."""
+    N, P = codes.shape
+    deq = (codes.reshape(N, P // block, block).astype(jnp.float32)
+           * scales[..., None])
+    return deq.reshape(N, P)
+
+
+# --------------------------------------------------------------------------
 # rwkv6 chunked recurrence (single head-batch layout)
 # --------------------------------------------------------------------------
 

@@ -1,9 +1,19 @@
-"""Production serving driver: continuous batched decode.
+"""Transformer decode driver for the generic launch harness — NOT the
+FL serving tier.
 
-On TPU: production mesh + sharded params/cache, prefill then a decode
-loop; here (CPU) ``--reduced`` serves a reduced config end-to-end, and
-without it the driver lowers+compiles the serve steps for the assigned
-shape (the same artifacts the dry-run checks).
+Scope: this drives the `repro.models.transformer` stack (prefill + KV
+-cache decode) over the production mesh — on TPU with sharded
+params/cache, on CPU via ``--reduced`` end-to-end or, without it, by
+lowering+compiling the serve steps for the assigned shape (the same
+artifacts the dry-run checks). It exercises the launch/mesh/steps
+plumbing and nothing about federated rounds.
+
+The actual FL serving tier — RSU servers distributing `FLState` models
+to vehicles (ROADMAP open item 3) — is still to be built. Its
+bytes-on-the-wire half now exists: `repro.comms` codecs (`delta`,
+`delta_int8`) compress the per-round model exchange an order of
+magnitude below full trees (benchmarks/comms.py, BENCH_comms.json);
+the server loop + admission control remain open.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b \

@@ -1,0 +1,143 @@
+"""Sharded-path comms codec contracts under a real (pod, data) mesh.
+
+The host-path bit-exactness of the lossless delta tier is pinned in
+tests/test_comms.py; this module pins the SHARDED half of the
+acceptance criterion: aggregating a delta-roundtripped cohort over the
+mesh is bitwise identical to the single-device aggregation of the
+original cohort, for all five schemes — and the sharded MultiRSU round
+with codec="delta" replays codec="identity" bit for bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms.codecs import CODECS, roundtrip_cohort
+from repro.core.aggregation import AGGREGATORS
+from repro.core.cohort import CohortBatch
+from repro.core.hierarchical import sharded_aggregate, sharded_hierarchical
+from repro.core.state import FLConfig
+from repro.launch.mesh import cohort_mesh
+
+pytestmark = []  # marker applied by conftest
+
+MESH = lambda: cohort_mesh(2, 4)  # noqa: E731 — lazy, after device check
+
+
+def _cohort(key, n, m):
+    """n valid rows padded to m by pad_to (replicated last row — the
+    padding roundtrip_cohort reproduces, so full-tree comparisons stay
+    bitwise; arbitrary pad rows would be rewritten by the codec stage)."""
+    trees = {"a": jax.random.normal(key, (n, 4, 3)),
+             "b": {"c": jax.random.normal(jax.random.fold_in(key, 1),
+                                          (n, 7))}}
+    losses = jax.random.uniform(jax.random.fold_in(key, 2), (n,))
+    blur = jax.random.uniform(jax.random.fold_in(key, 3), (n,),
+                              minval=10.0, maxval=20.0)
+    c = CohortBatch.from_stacked(trees, losses, n=n, blur=blur)
+    return c.pad_to(m) if m > n else c
+
+
+def _assert_trees_equal(t1, t2):
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", sorted(AGGREGATORS))
+def test_sharded_aggregate_of_delta_roundtrip_bitwise(name):
+    """Acceptance: decode-then-aggregate over the mesh == the
+    single-device aggregation of the ORIGINAL cohort, bit for bit, all
+    five schemes — the sharded half of the lossless contract."""
+    cfg = FLConfig(aggregator=name, codec="delta")
+    c = _cohort(jax.random.PRNGKey(0), n=5, m=8)
+    base = jax.tree.map(lambda x: x[0] * 0.5, c.trees)
+    c_rt, _ = roundtrip_cohort(cfg, c, base, None)
+    _assert_trees_equal(c_rt.trees, c.trees)       # reconstruction exact
+    ref = AGGREGATORS[name](c, cfg)
+    got = sharded_aggregate(c_rt, cfg, MESH())
+    _assert_trees_equal(ref, got)
+
+
+def test_sharded_hierarchical_of_delta_roundtrip_bitwise():
+    cfg = FLConfig(aggregator="flsimco", codec="delta")
+    c = _cohort(jax.random.PRNGKey(1), n=8, m=8)
+    base = jax.tree.map(lambda x: x[0] + 1.0, c.trees)
+    c_rt, _ = roundtrip_cohort(cfg, c, base, None)
+    ref = sharded_hierarchical(c.trees, c.blur, MESH(), 2)
+    got = sharded_hierarchical(c_rt.trees, c_rt.blur, MESH(), 2)
+    _assert_trees_equal(ref, got)
+
+
+def _tiny_scenario(**over):
+    from repro.core.scenario import Scenario
+    rng = np.random.RandomState(0)
+    data = [rng.rand(6, 4, 4, 3).astype(np.float32) for _ in range(8)]
+    kw = dict(data=data, n_vehicles=8, vehicles_per_round=4, batch_size=2,
+              rounds=2, local_iters=1, lr=0.4, seed=11,
+              topology="multi", topology_kwargs={"n_rsus": 2})
+    kw.update(over)
+    return Scenario(**kw)
+
+
+def test_sharded_multi_rsu_round_delta_bitwise():
+    """The sharded MultiRSU default path (mesh client blocks + sharded
+    hierarchical reduce) with the codec stage inserted before the
+    reduction: codec="delta" == codec="identity" bit for bit."""
+    from repro.core.scenario import run
+    sc_i = _tiny_scenario()
+    sc_d = _tiny_scenario(codec="delta")
+    assert sc_i.topology.resolve_mesh(sc_i.cfg) is not None
+    st_i, h_i = run(sc_i, rounds=2)
+    st_d, h_d = run(sc_d, rounds=2)
+    _assert_trees_equal(st_i.global_tree, st_d.global_tree)
+    assert h_i == h_d
+
+
+def test_sharded_multi_rsu_round_int8_threads_ef():
+    """The lossy tier on the sharded path: deterministic, EF residual
+    live, permutation-consistent slots (rows=perm scatter)."""
+    from repro.core.scenario import run
+    sc = _tiny_scenario(codec="delta_int8", lr=0.05)
+    st1, h1 = run(sc, rounds=2)
+    st2, h2 = run(sc, rounds=2)
+    _assert_trees_equal(st1.to_tree(), st2.to_tree())
+    assert h1 == h2
+    assert float(jnp.abs(st1.comms["ef"]).max()) > 0.0
+
+
+def test_two_stage_psum_f64_accum_multidevice():
+    """The f64 accumulator under a REAL 8-way psum: the cross-device
+    reduction accumulates in f64 and lands within one f32 rounding of
+    the exact host-f64 weighted sum; the default f32 psum does not, on
+    this cancellation-heavy cohort. Blur levels are chosen so every
+    weight-path reduction (sum L, sum w1) is EXACT in f32 regardless of
+    psum association — dyadic partials — which pins the host reference
+    weights bitwise to the device weights and isolates the value
+    accumulation as the only error source."""
+    mesh = cohort_mesh(1, 8)
+    rng = np.random.RandomState(0)
+    b = 8
+    big = np.tile([3e4, -3e4], b // 2)[:, None]
+    x = (rng.randn(b, 24) + big).astype(np.float32)
+    trees = {"w": jnp.asarray(x)}
+    # sum(L) = 128; w1 = (128 - L)/128 are multiples of 1/16 summing to
+    # 7.0 — every partial sum exact in any order. Equal weights within
+    # each (+3e4, -3e4) pair keep the big components cancelling exactly
+    # in f64, so `expect` is O(1) and the f32 cast is the whole error.
+    L = np.array([8, 8, 16, 16, 16, 16, 24, 24], np.float32)
+    blur = jnp.asarray(L)
+    w1 = (L.sum() - L) / L.sum()
+    w1 = (w1 / w1.sum()).astype(np.float32)
+    expect = np.tensordot(w1.astype(np.float64),
+                          x.astype(np.float64), axes=1).astype(np.float32)
+    got32 = sharded_hierarchical(trees, blur, mesh, 1, reduction="psum")
+    with jax.experimental.enable_x64():
+        got64 = sharded_hierarchical(trees, blur, mesh, 1,
+                                     reduction="psum",
+                                     accum_dtype=jnp.float64)
+    assert got64["w"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got64["w"]), expect,
+                               atol=2e-6, rtol=1e-6)
+    err32 = np.abs(np.asarray(got32["w"], np.float64) - expect).max()
+    err64 = np.abs(np.asarray(got64["w"], np.float64) - expect).max()
+    assert err64 <= err32

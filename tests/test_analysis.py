@@ -344,6 +344,53 @@ def test_scheme_padded_row_leak_flagged_with_hint():
     assert "padded rows" in violations[0].message
 
 
+# --------------------------------------------------------------------------
+# contracts: broken comms codecs -> contract-codec
+# --------------------------------------------------------------------------
+
+def _fake_codec(**over):
+    from repro.comms.codecs import Codec
+    kw = dict(name="fake", lossless=True, stateful=False,
+              encode=lambda s, b, ef=None, stacked_base=False:
+              ({"trees": s}, None),
+              decode=lambda p, b, stacked_base=False: p["trees"],
+              init_state=lambda cfg, tree: None)
+    kw.update(over)
+    return Codec(**kw)
+
+
+BROKEN_CODECS = {
+    # decode loses the dtype: aggregation would run on f16 trees
+    "cast-dtype": _fake_codec(decode=lambda p, b, stacked_base=False:
+                              jax.tree.map(lambda l: l.astype(jnp.float16),
+                                           p["trees"])),
+    # decode collapses the cohort axis
+    "row-collapse": _fake_codec(decode=lambda p, b, stacked_base=False:
+                                jax.tree.map(lambda l: l[:1], p["trees"])),
+    # a stateless codec smuggling cross-round state out of encode
+    "stateless-ef": _fake_codec(encode=lambda s, b, ef=None,
+                                stacked_base=False:
+                                ({"trees": s}, jnp.zeros((1, 8)))),
+    # a stateful codec that shrinks the residual it was handed
+    "ef-shrink": _fake_codec(
+        stateful=True,
+        init_state=lambda cfg, tree: {"ef": jnp.zeros(
+            (cfg.vehicles_per_round, 256), jnp.float32)},
+        encode=lambda s, b, ef=None, stacked_base=False:
+        ({"trees": s}, ef[:1])),
+}
+
+
+def test_broken_codecs_flagged_with_codec_rule():
+    violations = contracts.check_codecs(BROKEN_CODECS)
+    by_entry = {v.entry: v for v in violations}
+    assert set(by_entry) == set(BROKEN_CODECS)
+    assert all(v.rule == contracts.RULE_CODEC for v in violations)
+    assert all(v.registry == "CODECS" for v in violations)
+    # and the well-formed passthrough passes the same checker
+    assert contracts.check_codecs({"good": _fake_codec()}) == []
+
+
 def test_scheme_crash_reported_not_raised():
     violations = contracts.check_scheme_weights(
         {"boom": lambda c, cfg: (_ for _ in ()).throw(ValueError("boom"))})

@@ -1,0 +1,269 @@
+"""Comms codec tier (comms/codecs.py) acceptance tests.
+
+The contract layers pinned here:
+
+  1. registry — `CODECS` mirrors the AGGREGATORS/CLIENT_UPDATES shape
+     and `FLConfig` validates codec names at construction;
+  2. lossless bit-exactness — `codec="delta"` yields BITWISE-identical
+     campaigns to `codec="identity"` for all five SCHEME_WEIGHTS
+     schemes on the eager host paths (single/multi/handover) AND inside
+     the compiled engine (jit and scan modes), because the delta is a
+     wrapping bitcast-integer difference and aggregation always runs on
+     the reconstructed trees;
+  3. stateful codecs — delta_int8's error-feedback residual lives in
+     `FLState.comms`, threads through the engine carry with the compile
+     bounds intact (jit_round <= 1, scan <= 2), survives checkpoint
+     save/restore bit for bit, and keeps the within-mode determinism
+     contract of tests/test_engine.py.
+
+Cross-codec MODEL values for the lossy tier are only close in a
+relative sense (and this micro payload diverges by design — lr=0.4 on
+random 4x4 noise), so the int8 campaign tests assert mechanics (state
+threading, determinism, byte accounting), not accuracy; the error BOUND
+is pinned per-block in tests/test_comms_properties.py.
+"""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import restore_state, save_state
+from repro.comms.codecs import (CODECS, comms_init_state, flat_width,
+                                payload_nbytes, roundtrip_cohort,
+                                tree_nbytes)
+from repro.core.aggregation import SCHEME_WEIGHTS
+from repro.core.engine import compile_counts, run_campaign
+from repro.core.scenario import Scenario, run
+from repro.core.state import FLConfig, FLState
+
+_RS = np.random.RandomState(0)
+DATA = [_RS.rand(6, 4, 4, 3).astype(np.float32) for _ in range(8)]
+
+TINY = dict(data=DATA, n_vehicles=8, vehicles_per_round=3,
+            batch_size=2, rounds=4, local_iters=1, lr=0.4, seed=11)
+
+CASES = {
+    "single": dict(topology="single"),
+    "multi": dict(topology="multi", topology_kwargs={"n_rsus": 2}),
+    "handover": dict(topology="handover",
+                     topology_kwargs={"n_rsus": 2, "rsu_range": 200.0,
+                                      "round_duration": 50.0,
+                                      "sync_every": 2}),
+}
+
+
+def _scenario(case, **over):
+    kw = {**TINY, **CASES[case]}
+    kw.update(over)
+    return Scenario(**kw)
+
+
+def _assert_trees_equal(t1, t2):
+    l1, l2 = jax.tree.leaves(t1), jax.tree.leaves(t2)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _assert_states_identical(s1: FLState, s2: FLState):
+    _assert_trees_equal(s1.to_tree(), s2.to_tree())
+    assert s1.round == s2.round
+
+
+# memoized reference campaigns — shared across the bitwise tests below
+@functools.lru_cache(maxsize=None)
+def _eager(case, codec):
+    return run(_scenario(case, codec=codec), rounds=4)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit(case, codec):
+    return run_campaign(_scenario(case, codec=codec), rounds=4, mode="jit")
+
+
+# --------------------------------------------------------------------------
+# registry + config validation
+# --------------------------------------------------------------------------
+
+def test_registry_shape():
+    assert set(CODECS) == {"identity", "delta", "delta_int8"}
+    for name, c in CODECS.items():
+        assert c.name == name
+        assert callable(c.encode) and callable(c.decode)
+    assert CODECS["identity"].lossless and not CODECS["identity"].stateful
+    assert CODECS["delta"].lossless and not CODECS["delta"].stateful
+    assert not CODECS["delta_int8"].lossless
+    assert CODECS["delta_int8"].stateful
+
+
+def test_config_rejects_unknown_codec():
+    with pytest.raises(ValueError, match="codec"):
+        FLConfig(codec="gzip")
+
+
+def test_comms_init_state_shapes():
+    tree = {"w": jnp.zeros((3, 5)), "b": jnp.zeros((7,))}
+    cfg = FLConfig(vehicles_per_round=4)
+    assert comms_init_state(cfg, tree) is None                  # identity
+    assert comms_init_state(
+        FLConfig(vehicles_per_round=4, codec="delta"), tree) is None
+    st = comms_init_state(
+        FLConfig(vehicles_per_round=4, codec="delta_int8"), tree)
+    assert set(st) == {"ef"}
+    assert st["ef"].shape == (4, flat_width(tree))
+    assert flat_width(tree) == 256                              # 22 -> BQ
+
+
+# --------------------------------------------------------------------------
+# lossless bit-exactness: eager host paths, all five schemes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", sorted(SCHEME_WEIGHTS))
+def test_delta_bitwise_all_schemes_single(scheme):
+    """Acceptance: codec="delta" replays codec="identity" bit for bit
+    under every weighting scheme — the reconstructed cohort IS the
+    original cohort, so Eq. 2/Eq. 11 weighting never sees the codec."""
+    st_i, hist_i = run(_scenario("single", aggregator=scheme), rounds=2)
+    st_d, hist_d = run(_scenario("single", aggregator=scheme,
+                                 codec="delta"), rounds=2)
+    _assert_states_identical(st_i, st_d)
+    assert hist_i == hist_d
+
+
+@pytest.mark.parametrize("case", ["multi", "handover"])
+def test_delta_bitwise_hierarchical_topologies(case):
+    """Multi-RSU per-group roundtrips and handover per-download-RSU
+    bases (stacked deltas against each RSU's model) stay lossless."""
+    st_i, hist_i = _eager(case, "identity")
+    st_d, hist_d = _eager(case, "delta")
+    _assert_states_identical(st_i, st_d)
+    assert hist_i == hist_d
+
+
+# --------------------------------------------------------------------------
+# lossless bit-exactness: compiled engine, both modes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_engine_delta_bitwise(case):
+    """The codec stage traced into the fused round body changes nothing
+    for the lossless tier: engine campaigns with codec="delta" replay
+    codec="identity" bit for bit (same mode — cross-engine values only
+    float-agree, see tests/test_engine.py)."""
+    st_i, hist_i = _jit(case, "identity")
+    st_d, hist_d = _jit(case, "delta")
+    _assert_states_identical(st_i, st_d)
+    assert hist_i == hist_d
+    sc = _scenario(case, codec="delta")
+    assert compile_counts(sc)["jit_round"] <= 1
+
+
+def test_engine_scan_delta_bitwise():
+    sc_i = _scenario("single", codec="identity")
+    sc_d = _scenario("single", codec="delta")
+    st_i, hist_i = run_campaign(sc_i, rounds=4, mode="scan")
+    st_d, hist_d = run_campaign(sc_d, rounds=4, mode="scan")
+    _assert_states_identical(st_i, st_d)
+    assert hist_i == hist_d
+
+
+# --------------------------------------------------------------------------
+# stateful codec: EF threading, compile bounds, determinism
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_engine_int8_compile_bounds_and_determinism(case):
+    """delta_int8 grows the carry by the EF residual but still traces
+    ONE round program per campaign, and the campaign is bitwise
+    deterministic (same program, same schedule, same state out)."""
+    sc = _scenario(case, codec="delta_int8")
+    st1, hist1 = run_campaign(sc, rounds=4, mode="jit")
+    st2, hist2 = run_campaign(sc, rounds=4, mode="jit")
+    _assert_states_identical(st1, st2)
+    assert hist1 == hist2
+    assert compile_counts(sc)["jit_round"] == 1
+    ef = st1.comms["ef"]
+    assert ef.shape == (sc.cfg.vehicles_per_round,
+                        flat_width(st1.global_tree))
+    assert float(jnp.abs(ef).max()) > 0.0          # the residual is live
+
+
+def test_engine_int8_scan_chunks_compose():
+    """scan(2)+scan(2) == scan(4) bit for bit INCLUDING the comms state
+    — the EF residual is part of the chunk carry, not a side channel."""
+    sc = _scenario("single", codec="delta_int8")
+    st4, hist4 = run_campaign(sc, rounds=4, mode="scan")
+    st_a, hist_a = run_campaign(sc, rounds=2, mode="scan")
+    st_b, hist_b = run_campaign(sc, st_a, rounds=2, mode="scan")
+    _assert_states_identical(st4, st_b)
+    assert hist_a + hist_b == hist4
+    assert compile_counts(sc)["scan"] <= 2
+
+
+def test_eager_int8_matches_engine_state_shapes_and_is_deterministic():
+    """The eager path threads the same EF slots (slot = cohort
+    position): two eager runs agree bitwise, and the residual evolves
+    round over round."""
+    sc = _scenario("multi", codec="delta_int8")
+    st1, h1 = run(sc, rounds=2)
+    st2, h2 = run(sc, rounds=2)
+    _assert_states_identical(st1, st2)
+    assert h1 == h2
+    st0 = sc.init_state()
+    assert st0.comms["ef"].shape == st1.comms["ef"].shape
+    assert float(jnp.abs(st1.comms["ef"]).max()) > 0.0
+
+
+def test_checkpoint_roundtrips_comms_state(tmp_path):
+    """save/restore at round 2 then 2 more rounds == 4 straight rounds,
+    bit for bit — the EF residual survives the npz structural spec."""
+    sc = _scenario("single", codec="delta_int8")
+    st4, hist4 = run_campaign(sc, rounds=4, mode="jit")
+    st_ck, hist_ck = run_campaign(sc, rounds=4, mode="jit",
+                                  checkpoint_every=2,
+                                  checkpoint_dir=str(tmp_path))
+    _assert_states_identical(st4, st_ck)
+    assert hist_ck == hist4
+    restored = restore_state(os.path.join(tmp_path, "round_000002"), sc)
+    assert restored.round == 2
+    np.testing.assert_array_equal(np.asarray(restored.comms["ef"]).shape,
+                                  np.asarray(st4.comms["ef"]).shape)
+    st_b, hist_b = run_campaign(sc, restored, rounds=2, mode="jit")
+    _assert_states_identical(st4, st_b)
+    assert hist_ck[:2] + hist_b == hist4
+
+
+# --------------------------------------------------------------------------
+# byte accounting
+# --------------------------------------------------------------------------
+
+def test_payload_bytes_delta_vs_int8():
+    """The wire sizes behind BENCH_comms.json: a delta payload costs the
+    same as the raw f32 upload; the int8 payload costs ~1.016
+    bytes/parameter (codes + one f32 scale per 256-block)."""
+    key = jax.random.PRNGKey(0)
+    m, shapes = 4, ((32, 16), (512,))
+    stacked = {"w": jax.random.normal(key, (m,) + shapes[0]),
+               "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                      (m,) + shapes[1])}
+    base = jax.tree.map(lambda x: x[0], stacked)
+    raw = tree_nbytes(stacked)
+    pay_d, _ = CODECS["delta"].encode(stacked, base)
+    assert payload_nbytes(pay_d) == raw
+    pay_q, _ = CODECS["delta_int8"].encode(stacked, base)
+    P = flat_width(base)
+    assert payload_nbytes(pay_q) == m * P + m * (P // 256) * 4
+    assert payload_nbytes(pay_q) * 3.9 < raw
+
+
+def test_roundtrip_cohort_identity_is_a_no_op():
+    from repro.core.cohort import CohortBatch
+    cfg = FLConfig(codec="identity")
+    trees = {"w": jnp.arange(12.0).reshape(3, 4)}
+    c = CohortBatch.from_stacked(trees, jnp.zeros((3,)))
+    c2, comms = roundtrip_cohort(cfg, c, jax.tree.map(lambda x: x[0], trees),
+                                 None)
+    assert c2 is c and comms is None

@@ -1,0 +1,214 @@
+"""Property tests for the comms codecs (tier-1, hypothesis-driven).
+
+Random trees, random valid counts, random bucket padding — always the
+same three invariants:
+
+  * lossless codecs reconstruct BIT FOR BIT (any float values, wrapped
+    integer deltas never round), including through `roundtrip_cohort`
+    on bucket-padded cohorts where the padding rows replicate the last
+    valid row (the `pad_to` contract);
+  * delta_int8's per-element error obeys the blockwise bound
+    |decode - (delta + ef)| <= absmax_block / 254 (symmetric int8 with
+    round-half-even), and the error-feedback residual IS that error —
+    what the wire loses this round is exactly what folds in next round;
+  * the cohort mask invariants survive the stage: n, size, losses, blur
+    and every leaf shape/dtype are unchanged.
+
+hypothesis is a dev-only dependency; the module skips when absent, like
+tests/test_cohort_properties.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.comms.codecs import CODECS, flat_width, roundtrip_cohort
+from repro.core.cohort import CohortBatch
+from repro.core.state import FLConfig
+
+SETTINGS = settings(max_examples=40, deadline=None)
+
+BQ = 256
+
+
+def _tree(key, m, scale=1.0, dtypes=(jnp.float32, jnp.float32)):
+    return {"w": (jax.random.normal(key, (m, 3, 5)) * scale).astype(
+                dtypes[0]),
+            "b": {"c": (jax.random.normal(jax.random.fold_in(key, 1),
+                                          (m, 7)) * scale).astype(
+                dtypes[1])}}
+
+
+def _assert_bitwise(t1, t2):
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# lossless roundtrip
+# --------------------------------------------------------------------------
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16), m=st.integers(1, 6),
+       scale=st.sampled_from([1e-8, 1.0, 1e8]),
+       codec=st.sampled_from(["identity", "delta"]))
+def test_lossless_roundtrip_bitwise(seed, m, scale, codec):
+    key = jax.random.PRNGKey(seed)
+    stacked = _tree(key, m, scale)
+    base = _tree(jax.random.fold_in(key, 9), 1)
+    base = jax.tree.map(lambda x: x[0], base)
+    c = CODECS[codec]
+    payload, ef = c.encode(stacked, base)
+    assert ef is None
+    _assert_bitwise(c.decode(payload, base), stacked)
+
+
+def test_delta_roundtrip_survives_special_values():
+    """Wrapping integer deltas reconstruct inf/nan/subnormal/-0.0 too —
+    a plain float subtract cannot (inf - inf = nan)."""
+    base = {"w": jnp.array([0.0, 1.0, -2.5, 3e38], jnp.float32)}
+    weird = np.array([[np.inf, -np.inf, np.nan, -0.0],
+                      [1e-40, -1e-40, np.float32(2.0) ** -149, 0.0]],
+                     np.float32)
+    stacked = {"w": jnp.asarray(weird)}
+    c = CODECS["delta"]
+    payload, _ = c.encode(stacked, base)
+    out = c.decode(payload, base)
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]).view(np.int32),
+        weird.view(np.int32))                      # nan-safe bit compare
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16), m=st.integers(1, 4))
+def test_delta_roundtrip_stacked_base_and_int_leaves(seed, m):
+    """Per-row bases (the handover download) and integer leaves (step
+    counters and the like) roundtrip bitwise as well."""
+    key = jax.random.PRNGKey(seed)
+    stacked = {"w": jax.random.normal(key, (m, 4)),
+               "n": jax.random.randint(jax.random.fold_in(key, 1),
+                                       (m, 2), -1000, 1000)}
+    bases = {"w": jax.random.normal(jax.random.fold_in(key, 2), (m, 4)),
+             "n": jax.random.randint(jax.random.fold_in(key, 3),
+                                     (m, 2), -1000, 1000)}
+    c = CODECS["delta"]
+    payload, _ = c.encode(stacked, bases, stacked_base=True)
+    _assert_bitwise(c.decode(payload, bases, stacked_base=True), stacked)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 5),
+       pad=st.integers(0, 4))
+def test_roundtrip_cohort_padded_bitwise(seed, n, pad):
+    """Bucket-padded cohorts: `pad_to` replicates the last valid row, so
+    the re-padded decoded cohort is bitwise the input cohort — masks,
+    stats and all — for the lossless tier."""
+    key = jax.random.PRNGKey(seed)
+    trees = _tree(key, n)
+    losses = jax.random.uniform(jax.random.fold_in(key, 2), (n,))
+    blur = jax.random.uniform(jax.random.fold_in(key, 3), (n,),
+                              minval=10.0, maxval=20.0)
+    c = CohortBatch.from_stacked(trees, losses, blur=blur).pad_to(n + pad)
+    base = jax.tree.map(lambda x: x[0], _tree(jax.random.fold_in(key, 9), 1))
+    cfg = FLConfig(codec="delta")
+    c2, comms = roundtrip_cohort(cfg, c, base, None)
+    assert comms is None
+    assert c2.n == c.n and c2.size == c.size
+    _assert_bitwise(c2.trees, c.trees)
+    _assert_bitwise({"l": c2.losses, "b": c2.blur}, {"l": c.losses,
+                                                     "b": c.blur})
+
+
+# --------------------------------------------------------------------------
+# delta_int8 error bound + error feedback
+# --------------------------------------------------------------------------
+
+def _blockwise_absmax(y):
+    m, P = y.shape
+    return np.abs(y.reshape(m, P // BQ, BQ)).max(axis=-1)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16), m=st.integers(1, 4),
+       scale=st.sampled_from([1e-4, 1.0, 1e4]))
+def test_int8_error_within_blockwise_bound(seed, m, scale):
+    key = jax.random.PRNGKey(seed)
+    stacked = _tree(key, m, scale)
+    base = jax.tree.map(lambda x: x[0],
+                        _tree(jax.random.fold_in(key, 9), 1, scale))
+    c = CODECS["delta_int8"]
+    payload, new_ef = c.encode(stacked, base)
+    out = c.decode(payload, base)
+    # flatten the reconstruction error into the (m, Ppad) frame
+    delta = jax.tree.map(lambda x, b: np.asarray(x - b[None]), stacked, base)
+    err = jax.tree.map(lambda x, o: np.asarray(o) - np.asarray(x),
+                       stacked, out)
+    flat_d = np.concatenate(
+        [np.asarray(l).reshape(m, -1) for l in jax.tree.leaves(delta)], 1)
+    flat_e = np.concatenate(
+        [np.asarray(l).reshape(m, -1) for l in jax.tree.leaves(err)], 1)
+    P = flat_d.shape[1]
+    padded = np.zeros((m, flat_width(base)), np.float32)
+    padded[:, :P] = flat_d
+    bound = _blockwise_absmax(padded) / 254.0
+    bound = np.repeat(bound, BQ, axis=1)[:, :P]
+    # float32 slack: scale/inv-scale each round once
+    assert np.all(np.abs(flat_e) <= bound * (1 + 1e-5) + 1e-30)
+    # the EF residual IS the (padded-frame) quantization error
+    np.testing.assert_allclose(np.asarray(new_ef)[:, :P], -flat_e,
+                               atol=max(1e-6, 1e-6 * scale))
+
+
+def test_int8_error_feedback_telescopes():
+    """Feeding the residual back makes the RUNNING SUM of decoded
+    deltas track the running sum of true deltas to one quantization
+    step — the error no longer accumulates round over round."""
+    key = jax.random.PRNGKey(7)
+    c = CODECS["delta_int8"]
+    base = {"w": jnp.zeros((1, 300))}
+    base0 = jax.tree.map(lambda x: x[0], base)
+    ef = jnp.zeros((1, flat_width(base0)))
+    acc_true = np.zeros((1, 300))
+    acc_dec = np.zeros((1, 300))
+    for r in range(6):
+        stacked = {"w": jax.random.normal(jax.random.fold_in(key, r),
+                                          (1, 300)) * 1e-3}
+        payload, ef = c.encode(stacked, base0, ef)
+        out = c.decode(payload, base0)
+        acc_true += np.asarray(stacked["w"])
+        acc_dec += np.asarray(out["w"])
+        step = np.abs(np.asarray(stacked["w"]) + np.asarray(ef)[:, :300])
+        bound = step.max() / 254.0 * 300          # generous single-step
+        assert np.abs(acc_dec - acc_true).max() <= bound
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 4),
+       pad=st.integers(0, 3))
+def test_int8_roundtrip_cohort_mask_invariants(seed, n, pad):
+    """The lossy stage still preserves every structural invariant: n,
+    size, leaf shapes/dtypes, losses/blur untouched, EF slots outside
+    [0, n) untouched."""
+    key = jax.random.PRNGKey(seed)
+    trees = _tree(key, n)
+    losses = jax.random.uniform(jax.random.fold_in(key, 2), (n,))
+    c = CohortBatch.from_stacked(trees, losses).pad_to(n + pad)
+    base = jax.tree.map(lambda x: x[0], _tree(jax.random.fold_in(key, 9), 1))
+    cfg = FLConfig(codec="delta_int8", vehicles_per_round=n + 2)
+    from repro.comms.codecs import comms_init_state
+    comms0 = comms_init_state(cfg, base)
+    marker = comms0["ef"].at[n:].set(123.0)
+    c2, comms = roundtrip_cohort(cfg, c, base, {"ef": marker})
+    assert c2.n == c.n and c2.size == c.size
+    for a, b in zip(jax.tree.leaves(c2.trees), jax.tree.leaves(c.trees)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    np.testing.assert_array_equal(np.asarray(c2.losses),
+                                  np.asarray(c.losses))
+    np.testing.assert_array_equal(np.asarray(comms["ef"][n:]),
+                                  np.asarray(marker[n:]))

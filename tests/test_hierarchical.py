@@ -54,6 +54,48 @@ def test_blurrier_rsu_gets_less_weight():
     assert d_sharp < d_blurry
 
 
+def test_two_stage_psum_f64_accum_tightens_error():
+    """accum_dtype=jnp.float64 (under enable_x64) accumulates BOTH
+    weighted-psum levels in f64 and casts back to f32 once, after level
+    2 — on a cancellation-heavy cohort the result lands within one f32
+    rounding of the exact (f64 host) weighted sum, where the default
+    f32 accumulation does not. The default (accum_dtype=None) keeps the
+    original op sequence — pinned bit-compatible with the mesh tests in
+    tests/multidevice/."""
+    from repro.core.hierarchical import sharded_hierarchical
+    mesh = jax.make_mesh((1, 1), ("pod", "data"))
+    rng = np.random.RandomState(0)
+    b = 8
+    # alternating +-3e4 rows bury the O(1) signal in f32 partial sums
+    big = np.tile([3e4, -3e4], b // 2)[:, None, None]
+    x = (rng.randn(b, 4, 5) + big).astype(np.float32)
+    trees = {"w": jnp.asarray(x)}
+    blur = jnp.asarray(rng.uniform(10.0, 20.0, b).astype(np.float32))
+
+    # the exact reference: the function's own f32 weights, accumulated
+    # in numpy float64, rounded to f32 at the end
+    L = np.asarray(blur, np.float32)
+    w1 = (L.sum() - L) / L.sum()
+    w1 = (w1 / w1.sum()).astype(np.float32)
+    expect = np.tensordot(w1.astype(np.float64),
+                          x.astype(np.float64), axes=1).astype(np.float32)
+
+    got32 = sharded_hierarchical(trees, blur, mesh, 1, reduction="psum")
+    with jax.experimental.enable_x64():
+        got64 = sharded_hierarchical(trees, blur, mesh, 1,
+                                     reduction="psum",
+                                     accum_dtype=jnp.float64)
+    assert got64["w"].dtype == jnp.float32          # cast back after level 2
+    err32 = np.abs(np.asarray(got32["w"], np.float64) - expect).max()
+    err64 = np.abs(np.asarray(got64["w"], np.float64) - expect).max()
+    np.testing.assert_allclose(np.asarray(got64["w"]), expect,
+                               atol=2e-6, rtol=1e-6)   # tightened
+    assert err64 <= err32
+    # the f32 path only promises the documented ~1e-5-relative regime:
+    # here (|terms| ~ 3e4) its absolute error is visibly larger
+    assert err32 > 10 * max(err64, 1e-9)
+
+
 def test_two_stage_psum_matches_host_hierarchical():
     """shard_map two-stage collective == host-level hierarchical result.
     Uses a (pod=1, data=N) mesh on whatever devices exist; with one pod

@@ -93,6 +93,77 @@ def test_wagg_dtype_sweep(dtype):
 
 
 # --------------------------------------------------------------------------
+# qdelta (int8 comms codec)
+# --------------------------------------------------------------------------
+
+def _q8_case(key, N, P, scale=1.0):
+    flat = jax.random.normal(key, (N, P)) * scale
+    ef = jax.random.normal(jax.random.fold_in(key, 1), (N, P)) * scale * 0.01
+    return flat, ef
+
+
+@pytest.mark.parametrize("N", [1, 3])
+@pytest.mark.parametrize("P", [256, 1024, 4096])
+def test_q8_encode_parity_interpret_vs_ref(N, P):
+    """The Pallas kernel and the jnp reference are BITWISE identical on
+    codes and scales (the wire payload — `absmax * (1/127)` is a single
+    rounding both lowerings share). new_ef only float-agrees: XLA is
+    free to FMA-fuse `y - codes*scales` differently per backend."""
+    flat, ef = _q8_case(jax.random.PRNGKey(N * 1000 + P), N, P)
+    c1, s1, e1 = ops.q8_encode_flat(flat, ef, backend="interpret")
+    c2, s2, e2 = ops.q8_encode_flat(flat, ef, backend="ref")
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-6)
+
+
+@pytest.mark.parametrize("P", [256, 2048])
+def test_q8_decode_parity_interpret_vs_ref(P):
+    """Dequantize is a plain broadcast-multiply — bitwise across
+    backends, so the RECONSTRUCTED models (what aggregation consumes)
+    never depend on where the codec ran."""
+    flat, ef = _q8_case(jax.random.PRNGKey(P), 2, P)
+    codes, scales, _ = ops.q8_encode_flat(flat, ef, backend="ref")
+    o1 = ops.q8_decode_flat(codes, scales, backend="interpret")
+    o2 = ops.q8_decode_flat(codes, scales, backend="ref")
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_q8_roundtrip_semantics():
+    """Blockwise symmetric int8: codes bounded, zero blocks exact, the
+    residual is exactly y - dequantized(y)."""
+    key = jax.random.PRNGKey(5)
+    flat = jnp.concatenate([jax.random.normal(key, (2, 256)),
+                            jnp.zeros((2, 256))], axis=1)
+    ef = jnp.zeros_like(flat)
+    codes, scales, new_ef = ops.q8_encode_flat(flat, ef, backend="ref")
+    assert codes.dtype == jnp.int8 and scales.shape == (2, 2)
+    assert int(jnp.max(jnp.abs(codes))) <= 127
+    # all-zero block: zero scale, zero codes, zero error (guarded 1/s)
+    np.testing.assert_array_equal(np.asarray(codes[:, 256:]), 0)
+    np.testing.assert_array_equal(np.asarray(scales[:, 1]), 0.0)
+    out = ops.q8_decode_flat(codes, scales, backend="ref")
+    np.testing.assert_allclose(np.asarray(out + new_ef), np.asarray(flat),
+                               atol=1e-6)
+    # per-element bound: |y - deq| <= absmax_block / 254
+    bound = np.abs(np.asarray(flat)).reshape(2, 2, 256).max(-1) / 254.0
+    err = np.abs(np.asarray(flat - out)).reshape(2, 2, 256).max(-1)
+    assert np.all(err <= bound * (1 + 1e-6) + 1e-30)
+
+
+def test_q8_error_feedback_is_folded_in():
+    """encode(flat, ef) quantizes flat + ef, not flat alone."""
+    key = jax.random.PRNGKey(9)
+    flat = jax.random.normal(key, (1, 256))
+    ef = jax.random.normal(jax.random.fold_in(key, 1), (1, 256)) * 0.1
+    c1, s1, _ = ops.q8_encode_flat(flat, ef, backend="ref")
+    c2, s2, _ = ops.q8_encode_flat(flat + ef, jnp.zeros_like(ef),
+                                   backend="ref")
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+# --------------------------------------------------------------------------
 # rwkv6
 # --------------------------------------------------------------------------
 
