@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract.
   fig6  — aggregation schemes, loss-gradient std         [paper Fig. 6]
   kernels — Pallas kernel microbench + fusion model
   comms — codec bytes/round + latency at fleet scale (BENCH_comms.json)
+  serve — RSU serving throughput + fetch latency (BENCH_serve.json)
   roofline — per (arch x shape x mesh) roofline terms from the dry-run
 
 Env knobs: BENCH_SCALE=ci|paper (default ci — minutes, not hours).
@@ -35,7 +36,7 @@ def main() -> None:
 
     from benchmarks import (beyond_weighting, comms, fig4_flsimco_vs_fedco,
                             fig5_cohort_size, fig6_aggregation, kernel_bench,
-                            roofline)
+                            roofline, serve)
 
     if scale == "paper":
         run("fig4", lambda: fig4_flsimco_vs_fedco.main(
@@ -68,6 +69,7 @@ def main() -> None:
     run("kernels", lambda: kernel_bench.main(["--quick"] if scale == "ci"
                                              else []))
     run("comms", lambda: comms.main(["--smoke"] if scale == "ci" else []))
+    run("serve", lambda: serve.main(["--smoke"] if scale == "ci" else []))
     run("roofline", lambda: roofline.main([]))
 
     if failures:

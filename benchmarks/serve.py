@@ -1,0 +1,213 @@
+"""RSU serving benchmark: models served/sec and fetch latency at fleet scale.
+
+The measured headline for the async serving tier (src/repro/serve/):
+publish a short campaign's worth of snapshots into a `ModelStore`, then
+hammer an `RSUServer` with 1k-100k simulated vehicle fetches from
+client threads — a realistic lag mix (most vehicles one round behind,
+some two, a few ancient enough to hit the full-tree staleness
+fallback) — and report models served/sec plus p50/p99 fetch latency
+per fleet size.
+
+In-bench gates (each raises SystemExit on failure):
+
+  parity      replies on the delta-chain, multi-hop, and full-fallback
+              paths all decode BITWISE equal to the published
+              `FLState` model tree for the reply's round — the serving
+              path never forks the fleet;
+  accounting  submitted == served + shed for every run, i.e. zero lost
+              requests;
+  shed path   a deliberately tiny queue (queue_limit=64) is flooded
+              with 1024 submits: exactly queue_limit are admitted, the
+              rest shed with retry-after, and every handle resolves.
+
+  PYTHONPATH=src python benchmarks/serve.py [--smoke]
+
+Writes benchmarks/results/BENCH_serve.json (CI uploads it as an
+artifact; the committed copy at the repo root feeds the README table).
+"""
+import argparse
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+import numpy as np
+
+from common import emit, save_json
+
+from repro.serve import ModelStore, RSUServer, ServePolicy, apply_reply
+
+CODEC = "delta"
+ROUNDS = 6          # published snapshots (round 0..5)
+MAX_LAG = 4
+
+
+def _fleet_tree(seed=0):
+    """~1.9k params — the same small synthetic fleet model the comms
+    benchmark prices; serving cost scales with tree bytes, not FLOPs."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    return {"conv": jax.random.normal(ks[0], (8, 3, 3)),
+            "dense": jax.random.normal(ks[1], (48, 32)),
+            "head": jax.random.normal(ks[2], (32, 8)),
+            "bias": jax.random.normal(ks[3], (48,))}
+
+
+def _publish_campaign(store):
+    """ROUNDS snapshots, each a perturbation of the last — stands in for
+    `run_campaign(publish=store.publish)` so the benchmark isolates
+    serving throughput from training cost."""
+    tree = _fleet_tree()
+    for r in range(ROUNDS):
+        key = jax.random.fold_in(jax.random.PRNGKey(99), r)
+        ks = jax.random.split(key, len(jax.tree.leaves(tree)))
+        it = iter(ks)
+        tree = jax.tree.map(
+            lambda l: l + 0.01 * jax.random.normal(next(it), l.shape), tree)
+        store.publish(r, tree)
+    return store
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def _client(server, store, haves, out):
+    """One fleet thread: submit a burst, wait, record latency."""
+    lat, served, shed = [], 0, 0
+    for i in range(0, len(haves), 128):
+        pends = [server.submit(h) for h in haves[i:i + 128]]
+        for p in pends:
+            rep = p.result(timeout=60.0)
+            lat.append((time.perf_counter() - p.t_submit) * 1e6)
+            if rep.status == "ok":
+                served += 1
+            else:
+                shed += 1
+    out.append({"lat_us": lat, "served": served, "shed": shed})
+
+
+def _lag_mix(rs, latest, n):
+    """70% one round behind, 20% two behind, 10% ancient (-> full)."""
+    draws = rs.rand(n)
+    haves = np.full(n, latest - 1, np.int64)
+    haves[draws >= 0.7] = latest - 2
+    haves[draws >= 0.9] = -1
+    return haves
+
+
+def _parity_gate(store):
+    """Bitwise decode parity on every reply shape vs the published tree."""
+    policy = ServePolicy(max_lag=MAX_LAG)
+    latest = store.latest_round
+    checks = []
+    for have in (latest - 1, latest - MAX_LAG):      # 1-hop and 4-hop chains
+        from repro.serve import build_reply
+        rep = build_reply(store, policy, have)
+        assert rep.kind == "delta", rep.kind
+        dec = apply_reply(rep, store.get(have).served_tree, codec=CODEC)
+        checks.append(("delta", have, _trees_equal(dec,
+                                                   store.get(rep.round).tree)))
+    from repro.serve import build_reply
+    rep = build_reply(store, ServePolicy(max_lag=0), latest - 1)
+    assert rep.kind == "full", rep.kind
+    dec = apply_reply(rep, None, codec=CODEC)
+    checks.append(("full", latest - 1,
+                   _trees_equal(dec, store.get(rep.round).tree)))
+    for kind, have, ok in checks:
+        if not ok:
+            raise SystemExit(f"decode parity FAILED: kind={kind} have={have}")
+    return [{"kind": k, "have_round": int(h), "bitwise": bool(ok)}
+            for k, h, ok in checks]
+
+
+def _shed_gate():
+    """Flood a tiny bounded queue; prove shed accounting + zero loss."""
+    store = _publish_campaign(ModelStore(codec=CODEC, window=ROUNDS + 2))
+    policy = ServePolicy(queue_limit=64, retry_after_s=0.01)
+    server = RSUServer(store, policy, start=False)
+    pends = [server.submit(store.latest_round - 1) for _ in range(1024)]
+    while server.drain_once(block=False):
+        pass
+    st = server.stats()
+    if not all(p.done() for p in pends):
+        raise SystemExit("shed path lost requests")
+    if st["served"] != 64 or st["shed"] != 960:
+        raise SystemExit(f"shed accounting off: {st}")
+    if any(p.result().status == "shed" and p.result().retry_after_s <= 0
+           for p in pends):
+        raise SystemExit("shed replies missing retry-after backpressure")
+    return {"submitted": st["submitted"], "served": st["served"],
+            "shed": st["shed"], "lost": 0,
+            "retry_after_s": policy.retry_after_s}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: smallest fleet only")
+    a = ap.parse_args(argv)
+    fleets = [1_000] if a.smoke else [1_000, 10_000, 100_000]
+    n_threads = 8
+
+    results = {"codec": CODEC, "rounds": ROUNDS, "max_lag": MAX_LAG,
+               "fleets": []}
+    store = _publish_campaign(ModelStore(codec=CODEC, window=ROUNDS + 2))
+    latest = store.latest_round
+
+    results["decode_parity"] = _parity_gate(store)
+    print("decode parity (delta 1-hop, delta chain, full fallback): "
+          "bitwise OK")
+
+    for V in fleets:
+        rs = np.random.RandomState(1234)
+        haves = _lag_mix(rs, latest, V)
+        server = RSUServer(store, ServePolicy(max_lag=MAX_LAG,
+                                              queue_limit=max(4096, V)))
+        out = []
+        chunks = np.array_split(haves, n_threads)
+        threads = [threading.Thread(target=_client,
+                                    args=(server, store, list(c), out))
+                   for c in chunks]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        server.stop()
+        st = server.stats()
+        served = sum(o["served"] for o in out)
+        shed = sum(o["shed"] for o in out)
+        if st["submitted"] != served + shed or shed != 0:
+            raise SystemExit(f"accounting off at V={V}: {st} "
+                             f"(client saw served={served} shed={shed})")
+        lat = np.concatenate([np.asarray(o["lat_us"]) for o in out])
+        p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+        rate = served / wall
+        emit(f"serve_fetch_V{V}", float(np.mean(lat)),
+             f"{rate:.0f}/s p50={p50:.0f}us p99={p99:.0f}us")
+        results["fleets"].append({
+            "vehicles": int(V), "served": int(served), "shed": int(shed),
+            "lost": int(st["submitted"] - served - shed),
+            "models_per_sec": round(rate, 1),
+            "p50_us": round(float(p50), 1), "p99_us": round(float(p99), 1),
+            "batches": st["batches"], "groups": st["groups"],
+            "max_queue_depth": st["max_depth"]})
+
+    results["shed_path"] = _shed_gate()
+    print(f"shed path: {results['shed_path']['shed']} shed of "
+          f"{results['shed_path']['submitted']} with retry-after, 0 lost")
+
+    save_json("BENCH_serve.json", results)
+    print("wrote benchmarks/results/BENCH_serve.json")
+
+
+if __name__ == "__main__":
+    main()

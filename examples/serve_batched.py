@@ -7,11 +7,11 @@ then decodes N tokens per sequence — the serve path the decode_32k /
 long_500k dry-run shapes lower at production scale. Nothing here
 touches federated rounds or RSU model distribution.
 
-The FL edge-serving story (ROADMAP open item 3) builds on
-`repro.comms` instead: delta/int8 codecs that cut the per-round model
-exchange to a fraction of full-tree bytes (see benchmarks/comms.py and
-the README bytes/round table). What remains open is the RSU server
-loop with request batching and admission control.
+The FL edge-serving story (ROADMAP item 3, now closed) lives in
+`repro.serve` instead: `ModelStore` snapshots delta-encoded through
+`repro.comms`, plus an `RSUServer` with request batching and admission
+control — see examples/serve_campaign.py for the train-and-serve demo
+and benchmarks/serve.py for the measured throughput.
 
   PYTHONPATH=src python examples/serve_batched.py --arch tinyllama-1.1b \
       --reduced --tokens 16

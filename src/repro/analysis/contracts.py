@@ -23,6 +23,13 @@ contract the rest of the stack assumes:
                    shapes and dtypes; stateful codecs must hand back a
                    residual of the shape they were given and declare a
                    round-0 state, stateless ones must declare neither.
+  serve framing    (contract-serve) the serving tier's snapshot framing
+                   over the same CODECS entries: encode_snapshot /
+                   decode_snapshot must round-trip ONE model tree —
+                   exactly what `ModelStore.publish` stores and the
+                   vehicle decodes — back to the model treedef with
+                   every leaf shape/dtype intact, and the payload must
+                   be non-empty concrete arrays.
 
 All checks interpret the registry entries abstractly — a ShapeDtypeStruct
 cohort over a ShapeDtypeStruct resnet tree — so a broken scheme is
@@ -61,6 +68,7 @@ __all__ = [
     "check_client_updates",
     "check_codecs",
     "check_scheme_weights",
+    "check_serve",
     "check_topologies",
     "main",
 ]
@@ -72,6 +80,7 @@ RULE_WEIGHT_SHAPE = "contract-weight-shape"
 RULE_WEIGHT_DTYPE = "contract-weight-dtype"
 RULE_TOPOLOGY_API = "contract-topology-api"
 RULE_CODEC = "contract-codec"
+RULE_SERVE = "contract-serve"
 RULE_EVAL_ERROR = "contract-eval-error"
 
 
@@ -373,6 +382,44 @@ def check_codecs(codecs: Optional[Mapping] = None,
     return out
 
 
+def check_serve(codecs: Optional[Mapping] = None) -> List[Violation]:
+    """The serving tier's snapshot-framing contract, interpreted
+    abstractly: for every CODECS entry, ``encode_snapshot`` on a single
+    model tree (against a base of the same tree — exactly what
+    `ModelStore.publish` hands it from the `run_campaign` publish hook)
+    must yield a non-empty payload, and ``decode_snapshot`` must invert
+    it back to the model treedef with every leaf shape/dtype intact —
+    the publish-hook output a vehicle reconstructs."""
+    from ..comms import codecs as codecs_mod
+    from ..comms.codecs import decode_snapshot, encode_snapshot
+    codecs = codecs_mod.CODECS if codecs is None else codecs
+    tree = model_tree_sds()
+    out: List[Violation] = []
+    for name, codec in sorted(codecs.items()):
+        def bad(rule, msg):
+            return Violation("CODECS", name, rule, msg)
+        try:
+            payload = jax.eval_shape(
+                lambda t, b: encode_snapshot(codec, t, b), tree, tree)
+            decoded = jax.eval_shape(
+                lambda p, b: decode_snapshot(codec, p, b), payload, tree)
+        except Exception as e:  # noqa: BLE001 - report, don't crash
+            out.append(bad(RULE_EVAL_ERROR,
+                           f"snapshot framing raised under eval_shape: "
+                           f"{e!r}"))
+            continue
+        if not jax.tree.leaves(payload):
+            out.append(bad(RULE_SERVE, "encode_snapshot returned an empty "
+                                       "payload pytree"))
+            continue
+        diff = _diff_trees(tree, decoded)
+        if diff is not None:
+            out.append(bad(RULE_SERVE,
+                           f"decode_snapshot(encode_snapshot(tree)) is not "
+                           f"the model tree: {diff}"))
+    return out
+
+
 def check_all(*, schemes: Optional[Mapping] = None,
               aggregators: Optional[Mapping] = None,
               client_updates: Optional[Mapping] = None,
@@ -385,6 +432,7 @@ def check_all(*, schemes: Optional[Mapping] = None,
     out.extend(check_client_updates(client_updates))
     out.extend(check_topologies(topologies))
     out.extend(check_codecs(codecs))
+    out.extend(check_serve(codecs))
     return out
 
 

@@ -288,6 +288,44 @@ def comms_init_state(cfg, tree) -> Optional[dict]:
 
 
 # --------------------------------------------------------------------------
+# snapshot framing (the serving tier's single-tree payloads)
+# --------------------------------------------------------------------------
+
+def resolve_codec(codec) -> Codec:
+    """A ``Codec`` from a registry name or a `Codec` instance (the
+    injectable form the analysis contracts exercise)."""
+    return CODECS[codec] if isinstance(codec, str) else codec
+
+
+def encode_snapshot(codec, tree, base):
+    """ONE model tree framed through a stacked-cohort codec: the tree
+    gains a length-1 cohort axis and row 0 encodes against ``base`` (the
+    model the fetching vehicle already holds; ignored by ``identity``).
+
+    This is the serving tier's downlink payload format (serve/store.py):
+    `ModelStore.publish` encodes round r ONCE as
+    ``encode_snapshot(codec, model_r, served_{r-1})`` and every fetch
+    for round r reuses the payload. Stateful codecs run with a zero
+    residual — a snapshot is one payload per round, there is no
+    cross-fetch error-feedback to telescope (lossy drift is handled by
+    chaining each snapshot off the previous RECONSTRUCTION instead, so
+    server and vehicles stay bitwise in step)."""
+    codec = resolve_codec(codec)
+    stacked = jax.tree.map(lambda l: l[None], tree)
+    payload, _ = codec.encode(stacked, base)
+    return payload
+
+
+def decode_snapshot(codec, payload, base):
+    """Invert `encode_snapshot`: decode the payload against ``base`` and
+    strip the length-1 cohort axis — the vehicle-side reconstruction
+    (bitwise equal to the published tree for lossless codecs)."""
+    codec = resolve_codec(codec)
+    stacked = codec.decode(payload, base)
+    return jax.tree.map(lambda l: l[0], stacked)
+
+
+# --------------------------------------------------------------------------
 # the CohortBatch encode/decode stage
 # --------------------------------------------------------------------------
 

@@ -531,7 +531,8 @@ def run_campaign(scenario, state: Optional[FLState] = None,
                  rounds: Optional[int] = None, *, mode: str = "auto",
                  checkpoint_every: Optional[int] = None,
                  checkpoint_dir: Optional[str] = None,
-                 log_every: int = 0, transfer_guard: bool = False):
+                 log_every: int = 0, transfer_guard: bool = False,
+                 publish=None, publish_every: int = 0):
     """Run `rounds` rounds (default cfg.rounds) through the compiled
     campaign engine. Returns (final state, history) like `run`, with the
     whole schedule bitwise-identical to the eager loop (losses/models
@@ -557,6 +558,16 @@ def run_campaign(scenario, state: Optional[FLState] = None,
                       one warm-up campaign first — compilation itself
                       uploads constants and would trip the guard
                       (tests/test_engine.py::test_round_body_no_implicit_transfers)
+    publish           serving hook: called as ``publish(round, tree)``
+                      with the post-chunk ``FLState`` round and global
+                      tree (device arrays, untouched) at the SAME
+                      once-per-chunk boundary as the history fetch —
+                      e.g. ``ModelStore.publish`` from repro.serve.
+                      Serving never adds per-round device syncs
+                      (tests/test_serve.py pins the compile bounds)
+    publish_every     chunk size when only serving cadence matters —
+                      like log_every/checkpoint_every but for the
+                      publish hook; 0 publishes once per natural chunk
     """
     check_campaign_supported(scenario)
     mode = resolve_mode(mode)
@@ -568,7 +579,10 @@ def run_campaign(scenario, state: Optional[FLState] = None,
     if state is None:
         state = scenario.init_state()
     total = rounds if rounds is not None else scenario.cfg.rounds
-    chunk = checkpoint_every or (log_every if log_every > 0 else total)
+    if publish_every < 0:
+        raise ValueError("publish_every must be >= 0")
+    chunk = (checkpoint_every or publish_every
+             or (log_every if log_every > 0 else total))
     chunk = max(1, min(chunk, total)) if total else 1
     fns = campaign_callables(scenario)
     dstack = _data_stack(scenario)
@@ -603,6 +617,8 @@ def run_campaign(scenario, state: Optional[FLState] = None,
                 print(f"[round {rec['round']:4d}] loss={rec['loss']:.4f} "
                       f"lr={rec['lr']:.4f}")
         state = _state_of(carry, state, scenario, key, rng, k, topo_host)
+        if publish is not None:
+            publish(state.round, state.global_tree)
         done += k
         if checkpoint_every:
             from repro.checkpoint.store import save_state

@@ -197,20 +197,25 @@ def run_round(state: FLState, scenario: Scenario, parallel: bool = True):
 
 def run(scenario: Scenario, state: Optional[FLState] = None,
         rounds: Optional[int] = None, parallel: bool = True,
-        log_every: int = 0):
+        log_every: int = 0, publish=None):
     """Run `rounds` rounds (default cfg.rounds) from `state` (default the
     scenario's round-0 state). Returns (final state, list of records).
 
     This is the eager loop: one `run_round` dispatch per round, one
     history fetch per round. `run_campaign` runs the same campaign
     through the compiled engine (core/engine.py) with an identical
-    schedule and once-per-chunk history fetches."""
+    schedule and once-per-chunk history fetches. ``publish`` is the
+    serving hook — called as ``publish(round, tree)`` after every round
+    (the eager analogue of `engine.run_campaign`'s once-per-chunk
+    publish; see repro.serve)."""
     if state is None:
         state = scenario.init_state()
     history = []
     for _ in range(rounds if rounds is not None else scenario.cfg.rounds):
         state, rec = run_round(state, scenario, parallel=parallel)
         history.append(rec)
+        if publish is not None:
+            publish(state.round, state.global_tree)
         if log_every and rec["round"] % log_every == 0:
             print(f"[round {rec['round']:4d}] loss={rec['loss']:.4f} "
                   f"lr={rec['lr']:.4f}")

@@ -1,0 +1,89 @@
+"""Transformer decode driver for the generic launch harness — NOT the
+FL serving tier.
+
+Scope: this drives the `repro.models.transformer` stack (prefill + KV
+-cache decode) over the production mesh — on TPU with sharded
+params/cache, on CPU via ``--reduced`` end-to-end or, without it, by
+lowering+compiling the decode steps for the assigned shape (the same
+artifacts the dry-run checks). It exercises the launch/mesh/steps
+plumbing and nothing about federated rounds.
+
+(This file used to live at launch/serve.py; that name now belongs to
+the real FL serving driver — RSU model distribution over the
+`repro.serve` tier.)
+
+  PYTHONPATH=src python -m repro.launch.decode --arch qwen2-0.5b --reduced
+  PYTHONPATH=src python -m repro.launch.decode --arch deepseek-67b \
+      --shape decode_32k            # lower+compile only
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs.base import INPUT_SHAPES, InputShape, get_config
+from repro.launch import steps as st
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+
+    cfg = get_config(a.arch)
+    if a.reduced:
+        cfg = cfg.reduced()
+        mesh = make_host_mesh()
+        B, S = 2, 32
+        shape = InputShape("cpu", S + a.tokens, B, "decode")
+    else:
+        mesh = make_production_mesh(multi_pod=a.multi_pod)
+        shape = INPUT_SHAPES[a.shape]
+
+    decode = st.make_decode_step(cfg, shape, mesh)
+
+    if not a.reduced:
+        specs = st.input_specs(cfg, shape, mesh)
+        p_sds, _ = st.params_specs(cfg, mesh)
+        with compat.set_mesh(mesh):
+            compiled = jax.jit(decode, donate_argnums=(1,)).lower(
+                p_sds, specs).compile()
+        print(compiled.memory_analysis())
+        return
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    B, S = 2, 32
+    prefill = st.make_prefill_step(cfg, InputShape("p", S + a.tokens, B,
+                                                   "prefill"), mesh,
+                                   param_dtype=jnp.float32)
+    toks = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    with compat.set_mesh(mesh):
+        last, cache = jax.jit(prefill)(params, {"tokens": toks})
+        tok = jnp.argmax(last[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+        jdecode = jax.jit(decode)
+        t0 = time.time()
+        for i in range(a.tokens):
+            logits, cache = jdecode(params, {
+                "tokens": tok,
+                "positions": jnp.full((B,), S + i, jnp.int32),
+                "cache": cache})
+            tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"{cfg.name}: {a.tokens} decode steps x {B} seqs "
+          f"in {dt*1e3:.0f} ms ({a.tokens*B/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,91 +1,138 @@
-"""Transformer decode driver for the generic launch harness — NOT the
-FL serving tier.
+"""FL serving driver: train a campaign and serve the fleet in one process.
 
-Scope: this drives the `repro.models.transformer` stack (prefill + KV
--cache decode) over the production mesh — on TPU with sharded
-params/cache, on CPU via ``--reduced`` end-to-end or, without it, by
-lowering+compiling the serve steps for the assigned shape (the same
-artifacts the dry-run checks). It exercises the launch/mesh/steps
-plumbing and nothing about federated rounds.
+The real RSU deployment loop from the paper's setting — the aggregated
+global model pushed down to moving vehicles — over the `repro.serve`
+tier (ROADMAP item 3): `run_campaign(publish=store.publish)` is the
+learner publishing one snapshot per round into a `ModelStore`;
+`RSUServer` is the distribution actor answering concurrent vehicle
+fetches with batched replies (delta chains through the `CODECS`
+registry, full-tree staleness fallback) and admission control.
 
-The actual FL serving tier — RSU servers distributing `FLState` models
-to vehicles (ROADMAP open item 3) — is still to be built. Its
-bytes-on-the-wire half now exists: `repro.comms` codecs (`delta`,
-`delta_int8`) compress the per-round model exchange an order of
-magnitude below full trees (benchmarks/comms.py, BENCH_comms.json);
-the server loop + admission control remain open.
+Fetcher threads simulate the fleet while the campaign trains: each
+vehicle holds some already-fetched round, submits a fetch, applies the
+reply payloads, and checks the decoded tree is BITWISE equal to the
+snapshot the server reconstructs — the drive-by verification that the
+serving path never forks the fleet. Exits non-zero if any request is
+lost or any decode mismatches.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced
-  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b \
-      --shape decode_32k            # lower+compile only
+  PYTHONPATH=src python -m repro.launch.serve --rounds 6 --vehicles 200
+  PYTHONPATH=src python -m repro.launch.serve --codec delta_int8 \
+      --max-lag 2 --queue-limit 64        # exercise full fallback + shed
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro import compat
-from repro.configs.base import INPUT_SHAPES, InputShape, get_config
-from repro.launch import steps as st
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models import transformer as T
+from repro.core.scenario import Scenario, run_campaign
+from repro.serve import ModelStore, RSUServer, ServePolicy, apply_reply
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--shape", default="decode_32k")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--tokens", type=int, default=8)
-    ap.add_argument("--multi-pod", action="store_true")
-    a = ap.parse_args()
+def _trees_equal(a, b) -> bool:
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
 
-    cfg = get_config(a.arch)
-    if a.reduced:
-        cfg = cfg.reduced()
-        mesh = make_host_mesh()
-        B, S = 2, 32
-        shape = InputShape("cpu", S + a.tokens, B, "decode")
-    else:
-        mesh = make_production_mesh(multi_pod=a.multi_pod)
-        shape = INPUT_SHAPES[a.shape]
 
-    decode = st.make_decode_step(cfg, shape, mesh)
+def _fetch_worker(server, store, codec, n_fetches, seed, out):
+    rs = np.random.RandomState(seed)
+    lat_us, mism, shed, served = [], 0, 0, 0
+    have_round, have_tree = None, None
+    for _ in range(n_fetches):
+        rounds = store.rounds()
+        if not rounds:
+            time.sleep(0.001)
+            continue
+        if have_round is None or rs.rand() < 0.2:
+            # (re)join the fleet at a random already-published round
+            have_round = int(rs.choice(rounds))
+            have_tree = store.get(have_round)
+            have_tree = (None if have_tree is None
+                         else have_tree.served_tree)
+        pend = server.submit(have_round if have_tree is not None else -1)
+        rep = pend.result(timeout=30.0)
+        lat_us.append((time.perf_counter() - pend.t_submit) * 1e6)
+        if rep.status == "shed":
+            shed += 1
+            time.sleep(rep.retry_after_s)
+            continue
+        served += 1
+        have_tree = apply_reply(rep, have_tree, codec=codec)
+        have_round = rep.round
+        snap = store.get(rep.round)
+        if snap is not None and not _trees_equal(have_tree,
+                                                 snap.served_tree):
+            mism += 1
+    out.append({"lat_us": lat_us, "mismatches": mism, "shed": shed,
+                "served": served})
 
-    if not a.reduced:
-        specs = st.input_specs(cfg, shape, mesh)
-        p_sds, _ = st.params_specs(cfg, mesh)
-        with compat.set_mesh(mesh):
-            compiled = jax.jit(decode, donate_argnums=(1,)).lower(
-                p_sds, specs).compile()
-        print(compiled.memory_analysis())
-        return
 
-    key = jax.random.PRNGKey(0)
-    params = T.init_params(cfg, key)
-    B, S = 2, 32
-    prefill = st.make_prefill_step(cfg, InputShape("p", S + a.tokens, B,
-                                                   "prefill"), mesh,
-                                   param_dtype=jnp.float32)
-    toks = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
-    with compat.set_mesh(mesh):
-        last, cache = jax.jit(prefill)(params, {"tokens": toks})
-        tok = jnp.argmax(last[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
-        jdecode = jax.jit(decode)
-        t0 = time.time()
-        for i in range(a.tokens):
-            logits, cache = jdecode(params, {
-                "tokens": tok,
-                "positions": jnp.full((B,), S + i, jnp.int32),
-                "cache": cache})
-            tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
-        jax.block_until_ready(tok)
-    dt = time.time() - t0
-    print(f"{cfg.name}: {a.tokens} decode steps x {B} seqs "
-          f"in {dt*1e3:.0f} ms ({a.tokens*B/dt:.1f} tok/s)")
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--vehicles", type=int, default=200,
+                    help="total fetches issued across the fleet")
+    ap.add_argument("--fetchers", type=int, default=8,
+                    help="client threads simulating the fleet")
+    ap.add_argument("--codec", default="delta",
+                    choices=["identity", "delta", "delta_int8"])
+    ap.add_argument("--max-lag", type=int, default=4)
+    ap.add_argument("--queue-limit", type=int, default=4096)
+    ap.add_argument("--window", type=int, default=16)
+    a = ap.parse_args(argv)
+
+    rs = np.random.RandomState(0)
+    data = [rs.rand(6, 4, 4, 3).astype(np.float32) for _ in range(8)]
+    sc = Scenario(topology="single", data=data, n_vehicles=8,
+                  vehicles_per_round=3, batch_size=2, rounds=a.rounds,
+                  local_iters=1, lr=0.4, seed=11)
+
+    store = ModelStore(codec=a.codec, window=a.window)
+    state0 = sc.init_state()
+    store.publish(state0.round, state0.global_tree)   # round-0 bootstrap
+    server = RSUServer(store, ServePolicy(max_lag=a.max_lag,
+                                          queue_limit=a.queue_limit))
+
+    per = max(1, a.vehicles // a.fetchers)
+    out: list = []
+    threads = [threading.Thread(target=_fetch_worker,
+                                args=(server, store, a.codec, per, 100 + i,
+                                      out))
+               for i in range(a.fetchers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    state, _hist = run_campaign(sc, state0, publish=store.publish,
+                                publish_every=1)
+    for t in threads:
+        t.join()
+    server.stop()
+    wall = time.perf_counter() - t0
+
+    lat = np.concatenate([np.asarray(o["lat_us"]) for o in out])
+    served = sum(o["served"] for o in out)
+    shed = sum(o["shed"] for o in out)
+    mism = sum(o["mismatches"] for o in out)
+    st = server.stats()
+    print(f"trained {a.rounds} rounds; published "
+          f"{store.stats()['publishes']} snapshots (codec={a.codec})")
+    print(f"served {served} fetches ({shed} shed) from "
+          f"{a.fetchers} fetchers in {wall:.2f}s "
+          f"-> {served / wall:.0f} models/s")
+    print(f"fetch latency p50 {np.percentile(lat, 50):.0f} us, "
+          f"p99 {np.percentile(lat, 99):.0f} us; "
+          f"batches={st['batches']} groups={st['groups']} "
+          f"max_depth={st['max_depth']}")
+    lost = st["submitted"] - st["served"] - st["shed"]
+    print(f"decode parity: {mism} mismatches; lost requests: {lost}")
+    if mism or lost:
+        raise SystemExit("FAIL: serve parity/accounting violated")
+    assert state.round == state0.round + a.rounds
+    print("OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+"""Async RSU serving tier — model distribution beside the round engine.
+
+The learner/actor split for vehicular FL (ROADMAP item 3, after the
+Ape-X architecture): `run_campaign` is the learner, publishing each new
+global model into a `ModelStore` of immutable (round, codec, payload)
+snapshots; `RSUServer` is the distribution actor, answering vehicle
+fetches from those snapshots with request batching and admission
+control, so millions of vehicles can pull models without ever blocking
+a training round. See DESIGN.md §Serving tier.
+"""
+from repro.serve.server import (PendingFetch, Reply, RSUServer, ServePolicy,
+                                apply_reply, build_reply)
+from repro.serve.store import ModelStore, Snapshot
+
+__all__ = [
+    "ModelStore",
+    "PendingFetch",
+    "Reply",
+    "RSUServer",
+    "ServePolicy",
+    "Snapshot",
+    "apply_reply",
+    "build_reply",
+]

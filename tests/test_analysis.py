@@ -391,6 +391,34 @@ def test_broken_codecs_flagged_with_codec_rule():
     assert contracts.check_codecs({"good": _fake_codec()}) == []
 
 
+BROKEN_SERVE_CODECS = {
+    # decode strips a SECOND axis: a vehicle would reconstruct the wrong
+    # tree shape from the snapshot payload
+    "axis-collapse": _fake_codec(decode=lambda p, b, stacked_base=False:
+                                 jax.tree.map(lambda l: l[0], p["trees"])),
+    # encode yields nothing to put on the wire; decode re-grows the axis
+    # from the base so the roundtrip alone would look fine
+    "empty-payload": _fake_codec(
+        encode=lambda s, b, ef=None, stacked_base=False: ({}, None),
+        decode=lambda p, b, stacked_base=False:
+        jax.tree.map(lambda l: l[None], b)),
+}
+
+
+def test_broken_snapshot_framing_flagged_with_serve_rule():
+    violations = contracts.check_serve(BROKEN_SERVE_CODECS)
+    by_entry = {v.entry: v for v in violations}
+    assert set(by_entry) == set(BROKEN_SERVE_CODECS)
+    assert all(v.rule == contracts.RULE_SERVE for v in violations)
+    assert all(v.registry == "CODECS" for v in violations)
+    # the well-formed passthrough frames snapshots correctly
+    assert contracts.check_serve({"good": _fake_codec()}) == []
+
+
+def test_real_codecs_pass_serve_contract():
+    assert contracts.check_serve() == []
+
+
 def test_scheme_crash_reported_not_raised():
     violations = contracts.check_scheme_weights(
         {"boom": lambda c, cfg: (_ for _ in ()).throw(ValueError("boom"))})

@@ -1,0 +1,332 @@
+"""Serving tier (src/repro/serve/) acceptance tests.
+
+Three layers:
+
+  1. store — publish/chain/full-fallback semantics, encode-once
+     accounting, eviction -> broken-chain -> full fallback, and BITWISE
+     decode parity of every reply path against the published trees for
+     all three codecs (lossy delta_int8 included: reconstruction
+     chaining keeps server and vehicles in step);
+  2. server — admission control (queue bound, shed-with-retry-after),
+     batch coalescing (one reply build per distinct have_round),
+     stop() draining semantics: no admitted request is ever lost;
+  3. serve-while-training — N client threads fetch DURING a
+     `run_campaign(publish=store.publish)`; every decoded tree is
+     bitwise equal to some published `FLState` model, and the engine
+     compile bounds (jit_round <= 1, scan <= 2) hold with the publish
+     hook attached — serving adds zero device syncs to the compiled
+     path.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.guards import assert_compile_bounds
+from repro.core.engine import compile_counts, run_campaign
+from repro.core.scenario import Scenario, run
+from repro.serve import (ModelStore, RSUServer, ServePolicy, apply_reply,
+                         build_reply)
+
+CODEC_NAMES = ["identity", "delta", "delta_int8"]
+
+
+def _tree_at(i, seed=0):
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+    ks = jax.random.split(k, 3)
+    return {"w": jax.random.normal(ks[0], (3, 2)),
+            "b": jax.random.normal(ks[1], (4,)),
+            "s": jax.random.normal(ks[2], ())}
+
+
+def _eq(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def _scenario(rounds=3):
+    rs = np.random.RandomState(0)
+    data = [rs.rand(6, 4, 4, 3).astype(np.float32) for _ in range(8)]
+    return Scenario(topology="single", data=data, n_vehicles=8,
+                    vehicles_per_round=3, batch_size=2, rounds=rounds,
+                    local_iters=1, lr=0.4, seed=11)
+
+
+# --------------------------------------------------------------------------
+# store
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODEC_NAMES)
+def test_publish_chain_decodes_bitwise(codec):
+    store = ModelStore(codec=codec, window=8)
+    for r in range(5):
+        store.publish(r, _tree_at(r))
+    # walk the whole chain from round 0 like a vehicle would
+    tree = store.get(0).served_tree
+    chain = store.chain_from(0)
+    assert [s.round for s in chain] == [1, 2, 3, 4]
+    from repro.comms.codecs import decode_snapshot
+    for snap in chain:
+        tree = decode_snapshot(codec, snap.delta_payload, tree)
+        assert _eq(tree, snap.served_tree)
+    if codec != "delta_int8":          # lossless: served IS the published
+        assert _eq(tree, store.get(4).tree)
+
+
+def test_publish_encodes_once_and_rounds_increase():
+    store = ModelStore(codec="delta", window=8)
+    for r in range(4):
+        store.publish(r, _tree_at(r))
+    st = store.stats()
+    assert st == {"publishes": 4, "delta_encodes": 3, "full_encodes": 0}
+    with pytest.raises(ValueError, match="increase"):
+        store.publish(2, _tree_at(2))
+    # full payload: built lazily, once, then cached
+    store.full_payload(3)
+    store.full_payload(3)
+    assert store.stats()["full_encodes"] == 1
+    with pytest.raises(KeyError):
+        store.full_payload(99)
+
+
+def test_eviction_breaks_chain_into_full_fallback():
+    store = ModelStore(codec="delta", window=3)
+    for r in range(6):
+        store.publish(r, _tree_at(r))
+    assert store.rounds() == [3, 4, 5]
+    # a vehicle on an evicted round has no chain...
+    assert store.chain_from(1) is None
+    rep = build_reply(store, ServePolicy(max_lag=10), 1)
+    assert rep.kind == "full" and rep.round == 5
+    # ...and the full payload decodes bitwise to the published model
+    assert _eq(apply_reply(rep, None), store.get(5).tree)
+    # a retained round still chains
+    chain = store.chain_from(3)
+    assert [s.round for s in chain] == [4, 5]
+
+
+@pytest.mark.parametrize("codec", CODEC_NAMES)
+def test_reply_paths_bitwise_vs_served_tree(codec):
+    store = ModelStore(codec=codec, window=8)
+    for r in range(5):
+        store.publish(r, _tree_at(r))
+    pol = ServePolicy(max_lag=2)
+    # delta within max_lag
+    rep = build_reply(store, pol, 3)
+    assert rep.kind == "delta" and rep.round == 4 and rep.base_round == 3
+    assert _eq(apply_reply(rep, store.get(3).served_tree, codec=codec),
+               store.get(4).served_tree)
+    # too stale for the chain -> full, still bitwise
+    rep = build_reply(store, pol, 0)
+    assert rep.kind == "full"
+    assert _eq(apply_reply(rep, None, codec=codec),
+               store.get(4).served_tree)
+    # up to date -> "current" carries no payload
+    rep = build_reply(store, pol, 4)
+    assert rep.kind == "current" and rep.payloads == ()
+    marker = {"sentinel": jax.numpy.zeros((1,))}
+    assert apply_reply(rep, marker, codec=codec) is marker
+
+
+def test_empty_store_sheds_with_retry_after():
+    store = ModelStore()
+    rep = build_reply(store, ServePolicy(retry_after_s=0.25), 0)
+    assert rep.status == "shed" and rep.retry_after_s == 0.25
+    with pytest.raises(ValueError, match="shed"):
+        apply_reply(rep, None)
+
+
+# --------------------------------------------------------------------------
+# server
+# --------------------------------------------------------------------------
+
+def _served_store(codec="delta", rounds=4):
+    store = ModelStore(codec=codec, window=rounds + 2)
+    for r in range(rounds):
+        store.publish(r, _tree_at(r))
+    return store
+
+
+def test_admission_control_bounds_queue_and_sheds():
+    server = RSUServer(_served_store(),
+                       ServePolicy(queue_limit=8, retry_after_s=0.125),
+                       start=False)
+    pends = [server.submit(2) for _ in range(20)]
+    # overflow requests resolved immediately as shed, with backpressure
+    shed = [p for p in pends if p.done()]
+    assert len(shed) == 12
+    assert all(p.result().status == "shed" and
+               p.result().retry_after_s == 0.125 for p in shed)
+    assert server.stats()["max_depth"] == 8
+    while server.drain_once(block=False):
+        pass
+    st = server.stats()
+    assert st["submitted"] == 20 and st["served"] == 8 and st["shed"] == 12
+    assert all(p.done() for p in pends)                     # zero lost
+
+
+def test_batcher_coalesces_one_reply_per_have_round():
+    server = RSUServer(_served_store(), ServePolicy(max_batch=64),
+                       start=False)
+    pends = [server.submit(r) for r in [2, 2, 2, 1, 1, 3]]
+    assert server.drain_once(block=False) == 6
+    st = server.stats()
+    assert st["batches"] == 1 and st["groups"] == 3
+    # coalesced requests share the SAME reply object
+    assert pends[0].result() is pends[1].result() is pends[2].result()
+    assert pends[3].result() is pends[4].result()
+    # full_payload built at most once however many stale fetchers
+    store = _served_store()
+    server2 = RSUServer(store, ServePolicy(max_lag=0), start=False)
+    for _ in range(5):
+        server2.submit(0)
+    server2.drain_once(block=False)
+    assert store.stats()["full_encodes"] == 1
+
+
+def test_max_batch_splits_drains():
+    server = RSUServer(_served_store(), ServePolicy(max_batch=4),
+                       start=False)
+    for _ in range(10):
+        server.submit(2)
+    drained = []
+    while True:
+        n = server.drain_once(block=False)
+        if not n:
+            break
+        drained.append(n)
+    assert drained == [4, 4, 2]
+
+
+def test_fetch_answered_exactly_once():
+    from repro.serve import PendingFetch, Reply
+    p = PendingFetch(0)
+    p._resolve(Reply(status="ok", kind="current", round=0))
+    with pytest.raises(RuntimeError, match="twice"):
+        p._resolve(Reply(status="ok", kind="current", round=0))
+    with pytest.raises(TimeoutError):
+        PendingFetch(0).result(timeout=0.01)
+
+
+def test_stop_drains_pending_then_sheds_new_submits():
+    server = RSUServer(_served_store(), start=False)
+    pends = [server.submit(2) for _ in range(5)]
+    server.stop(drain=True)
+    assert all(p.result().status == "ok" for p in pends)
+    late = server.submit(2)                     # after stop: immediate shed
+    assert late.result().status == "shed"
+    server2 = RSUServer(_served_store(), start=False)
+    pends2 = [server2.submit(2) for _ in range(5)]
+    server2.stop(drain=False)
+    assert all(p.result().status == "shed" for p in pends2)
+    st = server2.stats()
+    assert st["submitted"] == 5 and st["shed"] == 5 and st["served"] == 0
+
+
+def test_threaded_server_serves_concurrent_fleet():
+    store = _served_store()
+    server = RSUServer(store, ServePolicy(max_wait_s=0.002))
+    results = []
+
+    def fleet(seed):
+        rs = np.random.RandomState(seed)
+        got = []
+        for _ in range(25):
+            have = int(rs.randint(0, 4))
+            rep = server.submit(have).result(timeout=10.0)
+            assert rep.status == "ok"
+            base = store.get(have).served_tree
+            got.append(_eq(apply_reply(rep, base), store.get(3).served_tree))
+        results.append(got)
+
+    threads = [threading.Thread(target=fleet, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    server.stop()
+    assert all(all(r) for r in results)
+    st = server.stats()
+    assert st["submitted"] == st["served"] == 150 and st["shed"] == 0
+
+
+# --------------------------------------------------------------------------
+# serve-while-training
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["jit", "scan"])
+def test_serve_during_campaign_bitwise_and_compile_bounds(mode):
+    sc = _scenario(rounds=4)
+    store = ModelStore(codec="delta", window=8)
+    state0 = sc.init_state()
+    store.publish(state0.round, state0.global_tree)
+    published = {0: state0.global_tree}
+
+    def publish(rnd, tree):
+        published[int(rnd)] = tree
+        store.publish(rnd, tree)
+
+    server = RSUServer(store, ServePolicy(max_lag=8, max_wait_s=0.001))
+    stop_flag = threading.Event()
+    out = []
+
+    def vehicle(seed):
+        rs = np.random.RandomState(seed)
+        checked = 0
+        while not (stop_flag.is_set() and checked):
+            have = int(rs.choice(store.rounds()))
+            base = store.get(have)
+            rep = server.submit(have).result(timeout=30.0)
+            if rep.status != "ok" or base is None:
+                continue
+            tree = apply_reply(rep, base.served_tree)
+            snap = store.get(rep.round)
+            if snap is not None:            # not evicted meanwhile
+                assert rep.round >= have
+                assert _eq(tree, snap.served_tree)
+                checked += 1
+        out.append(checked)
+
+    threads = [threading.Thread(target=vehicle, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    state, hist = run_campaign(sc, state0, mode=mode, publish=publish,
+                               publish_every=1)
+    stop_flag.set()
+    for t in threads:
+        t.join()
+    server.stop()
+
+    # every published snapshot's tree IS an FLState model, bitwise
+    assert sorted(published) == [0, 1, 2, 3, 4]
+    assert _eq(published[4], state.global_tree)
+    for rnd, tree in published.items():
+        snap = store.get(rnd)
+        if snap is not None:
+            assert _eq(snap.tree, tree)
+    # the fleet actually fetched, nothing was lost
+    assert all(n > 0 for n in out)
+    st = server.stats()
+    assert st["submitted"] == st["served"] + st["shed"]
+    # publish hook adds no programs: the engine bounds still hold
+    assert_compile_bounds(compile_counts(sc), what=f"serve+{mode} campaign")
+
+
+def test_eager_run_publish_hook_matches_campaign_schedule():
+    sc = _scenario(rounds=3)
+    seen = []
+    state, _ = run(sc, publish=lambda r, t: seen.append((int(r), t)))
+    assert [r for r, _ in seen] == [1, 2, 3]
+    assert _eq(seen[-1][1], state.global_tree)
+
+
+def test_publish_every_chunks_campaign():
+    sc = _scenario(rounds=4)
+    seen = []
+    state, _ = run_campaign(sc, publish=lambda r, t: seen.append(int(r)),
+                            publish_every=2)
+    assert seen == [2, 4]
+    with pytest.raises(ValueError, match="publish_every"):
+        run_campaign(sc, publish_every=-1)

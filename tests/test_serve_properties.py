@@ -1,0 +1,187 @@
+"""Property tests for the serving tier (tier-1, hypothesis-driven).
+
+Random publish/submit/drain interleavings against a deterministic
+queue model — always the same invariants:
+
+  * accounting — no request is ever lost (every handle resolves after
+    the final drain) or answered twice (`PendingFetch._resolve` raises;
+    any double-resolution would abort the sequence);
+  * admission — the queue never holds more than ``queue_limit``
+    requests, and the shed count equals the reference model's
+    prediction exactly;
+  * freshness — every served reply's round is the requested round or
+    newer (equal only via the "current" kind);
+  * parity — every served payload (delta chain, full staleness
+    fallback, or "current") decodes BITWISE equal to the store's
+    reconstruction for the reply's round, for lossless AND lossy
+    codecs — random interleavings never fork the fleet.
+
+hypothesis is a dev-only dependency; the module skips when absent, like
+tests/test_cohort_properties.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve import ModelStore, RSUServer, ServePolicy, apply_reply
+
+SETTINGS = settings(max_examples=30, deadline=None)
+
+CODEC_NAMES = ["identity", "delta", "delta_int8"]
+
+
+def _tree_at(i, seed=0):
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+    ks = jax.random.split(k, 2)
+    return {"w": jax.random.normal(ks[0], (3, 2)),
+            "b": jax.random.normal(ks[1], (4,))}
+
+
+def _eq(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# one op sequence: publish next round / submit a fetch / drain a batch
+_OPS = st.lists(
+    st.one_of(
+        st.just(("publish",)),
+        st.tuples(st.just("submit"), st.integers(min_value=-1, max_value=12)),
+        st.just(("drain",)),
+    ),
+    min_size=1, max_size=40)
+
+
+@SETTINGS
+@given(ops=_OPS,
+       queue_limit=st.integers(min_value=1, max_value=6),
+       max_batch=st.integers(min_value=1, max_value=8),
+       max_lag=st.integers(min_value=0, max_value=4),
+       window=st.integers(min_value=1, max_value=6),
+       codec=st.sampled_from(CODEC_NAMES))
+def test_interleavings_preserve_queue_and_parity_invariants(
+        ops, queue_limit, max_batch, max_lag, window, codec):
+    store = ModelStore(codec=codec, window=window)
+    policy = ServePolicy(max_batch=max_batch, queue_limit=queue_limit,
+                         max_lag=max_lag, retry_after_s=0.01)
+    server = RSUServer(store, policy, start=False)
+
+    served_trees = {}          # round -> reconstruction (store evicts)
+    next_round = 0
+    model_queue = 0            # reference queue-depth model
+    model_shed = 0
+    pending = []               # (handle, have_round) in submit order
+
+    for op in ops:
+        if op[0] == "publish":
+            snap = store.publish(next_round, _tree_at(next_round))
+            served_trees[next_round] = snap.served_tree
+            next_round += 1
+        elif op[0] == "submit":
+            # vehicles hold an already-published round, or -1 (never
+            # fetched); a claimed-future round would legitimately get
+            # "current" at the server's latest, breaking the
+            # requested-or-newer invariant this test pins
+            have = min(op[1], next_round - 1) if next_round else -1
+            p = server.submit(have)
+            pending.append((p, have))
+            if model_queue >= queue_limit:
+                model_shed += 1
+                assert p.done() and p.result().status == "shed"
+                assert p.result().retry_after_s == policy.retry_after_s
+            else:
+                model_queue += 1
+        else:
+            n = server.drain_once(block=False)
+            assert n == min(model_queue, max_batch)
+            model_queue -= n
+        assert server.pending <= queue_limit
+
+    # final drain: whatever is still queued must be answered
+    while server.drain_once(block=False):
+        pass
+
+    st_ = server.stats()
+    assert st_["submitted"] == len(pending)
+    assert st_["shed"] == model_shed
+    assert st_["served"] + st_["shed"] == len(pending)   # zero lost
+    assert st_["max_depth"] <= queue_limit
+
+    for p, have in pending:
+        assert p.done()                                  # no request lost
+        rep = p.result()
+        if rep.status == "shed":
+            assert rep.retry_after_s > 0
+            continue
+        # requested-or-newer round
+        assert rep.round >= have
+        if rep.round == have:
+            assert rep.kind == "current"
+        if rep.kind == "delta":
+            assert rep.base_round == have
+            assert len(rep.payloads) <= max_lag
+        # parity: decode bitwise against the recorded reconstruction
+        # (the store may have evicted the round since — served_trees
+        # remembers every publish)
+        base = served_trees.get(have)
+        if rep.kind != "full" and base is None:
+            continue            # "current" for a never-held round id
+        tree = apply_reply(rep, base, codec=codec)
+        if rep.kind != "current":
+            assert _eq(tree, served_trees[rep.round])
+
+    # exactly-once: resolving any handle again must raise
+    from repro.serve import Reply
+    for p, _ in pending[:3]:
+        with pytest.raises(RuntimeError, match="twice"):
+            p._resolve(Reply(status="ok", kind="current", round=0))
+
+
+@SETTINGS
+@given(rounds=st.integers(min_value=2, max_value=8),
+       have=st.integers(min_value=0, max_value=7),
+       codec=st.sampled_from(CODEC_NAMES))
+def test_stale_fallback_decodes_bit_identical(rounds, have, codec):
+    have = min(have, rounds - 1)
+    store = ModelStore(codec=codec, window=rounds + 1)
+    for r in range(rounds):
+        store.publish(r, _tree_at(r, seed=3))
+    # max_lag=0 forces EVERY behind-vehicle onto the full-tree fallback
+    server = RSUServer(store, ServePolicy(max_lag=0), start=False)
+    p = server.submit(have)
+    server.drain_once(block=False)
+    rep = p.result()
+    latest = store.latest()
+    if have >= latest.round:
+        assert rep.kind == "current"
+    else:
+        assert rep.kind == "full"
+        assert _eq(apply_reply(rep, None, codec=codec), latest.served_tree)
+        if codec != "delta_int8":
+            assert _eq(apply_reply(rep, None, codec=codec), latest.tree)
+
+
+@SETTINGS
+@given(hops=st.integers(min_value=1, max_value=6),
+       codec=st.sampled_from(CODEC_NAMES))
+def test_delta_chain_consistency_any_depth(hops, codec):
+    """A vehicle applying the chain hop by hop lands BITWISE on the
+    server-side reconstruction, however long the chain — lossy codecs
+    included (snapshots chain off the reconstruction, not the exact
+    tree, so decode determinism is the only requirement)."""
+    store = ModelStore(codec=codec, window=hops + 2)
+    for r in range(hops + 1):
+        store.publish(r, _tree_at(r, seed=7))
+    server = RSUServer(store, ServePolicy(max_lag=hops), start=False)
+    p = server.submit(0)
+    server.drain_once(block=False)
+    rep = p.result()
+    assert rep.kind == "delta" and len(rep.payloads) == hops
+    tree = apply_reply(rep, store.get(0).served_tree, codec=codec)
+    assert _eq(tree, store.get(hops).served_tree)
